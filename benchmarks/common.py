@@ -1,0 +1,32 @@
+"""Shared helpers for the benchmark suite (CSV emission, timing)."""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Iterable, List
+
+
+def csv_line(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.2f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def time_us(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def fmt_matrix(names_rows: Iterable[str], names_cols: Iterable[str], m) -> str:
+    rows = list(names_rows)
+    cols = list(names_cols)
+    w = max(len(r) for r in rows) + 1
+    out = [" " * w + " ".join(f"{c:>12s}" for c in cols)]
+    for i, r in enumerate(rows):
+        out.append(f"{r:<{w}s}" + " ".join(f"{int(m[i][j]):>12d}" for j in range(len(cols))))
+    return "\n".join(out)

@@ -1,0 +1,116 @@
+"""Roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads ``artifacts/dryrun/*.json`` (written by ``repro.launch.dryrun``) and
+emits, per (arch × shape × mesh):
+
+    compute_s | memory_s | collective_s | dominant | MODEL_FLOPS/HLO_FLOPs |
+    roofline fraction | one-line "what would move the dominant term"
+
+Markdown output with ``--md`` is pasted into EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.perf.hlo import HloCostSummary
+from repro.perf.roofline import RooflineTerms, roofline_from_summary
+
+from .common import csv_line
+
+
+def load_records(art_dir: str, tag: str = "") -> List[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        base = os.path.basename(path)[: -len(".json")]
+        parts = base.split("__")
+        rec_tag = parts[3] if len(parts) > 3 else ""
+        if rec_tag != tag:
+            continue
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def advice(t: RooflineTerms, rec: dict) -> str:
+    dom = t.dominant
+    if dom == "compute":
+        if t.useful_flops_ratio < 0.5:
+            return "compute-bound with low useful ratio: cut remat recompute / capacity-factor waste"
+        return "compute-bound near useful parity: only faster math (fusion, wider microbatch) helps"
+    if dom == "memory":
+        return "HBM-bound: raise arithmetic intensity (fuse, larger per-step tile, bf16 temps, cache layout)"
+    bd = rec.get("summary", {}).get("collective_breakdown", {})
+    top = max(bd, key=bd.get) if bd else "collectives"
+    return f"collective-bound (mostly {top}): reshard to cut {top}, overlap with compute"
+
+
+def terms_from_record(rec: dict) -> Optional[RooflineTerms]:
+    if rec.get("status") != "ok":
+        return None
+    la = rec.get("loop_aware")
+    if la:  # loop-aware HLO recount (trip-count-correct; see perf/hlo_cost_model)
+        s = HloCostSummary(
+            flops_per_device=la["flops"],
+            hbm_bytes_per_device=la["hbm_bytes"],
+            collective_wire_bytes_per_device=la["collective_wire_bytes"],
+            collective_breakdown=la.get("collective_breakdown", {}),
+        )
+    else:  # legacy artifacts: raw cost_analysis (undercounts while bodies)
+        s = HloCostSummary.from_dict(rec["summary"])
+    return roofline_from_summary(
+        s,
+        arch=rec["arch"],
+        shape=rec["shape"],
+        mesh=rec["mesh"],
+        chips=rec["chips"],
+        model_flops_total=rec["model_flops_total"],
+    )
+
+
+def run(art_dir: str = "artifacts/dryrun", md: bool = False, tag: str = "") -> List[dict]:
+    recs = load_records(art_dir, tag)
+    rows = []
+    header = (
+        "| arch | shape | mesh | step | compute_s | memory_s | collective_s | "
+        "dominant | useful/HLO | roofline frac | bottleneck note |"
+    )
+    if md:
+        print(header)
+        print("|" + "---|" * 11)
+    for rec in recs:
+        t = terms_from_record(rec)
+        if t is None:
+            if md:
+                print(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | — | — | — | — | "
+                      f"ERROR | — | — | {rec.get('error', '?')[:60]} |")
+            continue
+        note = advice(t, rec)
+        row = t.to_dict() | {"note": note, "step": rec.get("step", "")}
+        rows.append(row)
+        if md:
+            print(
+                f"| {t.arch} | {t.shape} | {t.mesh} | {rec.get('step','')} "
+                f"| {t.compute_s:.3e} | {t.memory_s:.3e} | {t.collective_s:.3e} "
+                f"| {t.dominant} | {t.useful_flops_ratio:.2f} | {t.roofline_fraction:.3f} | {note} |"
+            )
+        else:
+            csv_line(
+                f"roofline_{t.arch}_{t.shape}_{t.mesh}",
+                t.bound_s * 1e6,
+                f"dominant={t.dominant};frac={t.roofline_fraction:.3f};useful={t.useful_flops_ratio:.2f}",
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="artifacts/dryrun")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--tag", default="")
+    a = ap.parse_args()
+    run(a.artifacts, a.md, a.tag)

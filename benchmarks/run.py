@@ -1,0 +1,50 @@
+"""Benchmark orchestrator — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything fast
+    PYTHONPATH=src python -m benchmarks.run --with-hlo # include compiled-HLO fig5 tier
+
+Prints ``name,us_per_call,derived`` CSV lines (plus human-readable detail).
+The roofline section only appears once dry-run artifacts exist.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--with-hlo", action="store_true", help="fig5 from a real compiled step")
+    ap.add_argument("--artifacts", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    from . import fig2_l2lat, fig34_mixed, fig5_deepbench, serving
+
+    results = []
+    print("=== Fig 2: l2_lat 4-stream (tip / clean / serialized) ===")
+    results.append(("fig2", fig2_l2lat.run()["ok"]))
+    print("\n=== Fig 3: mixed kernels, 1 side stream ===")
+    results.append(("fig3", fig34_mixed.run(1)["ok"]))
+    print("\n=== Fig 4: mixed kernels, 3 side streams ===")
+    results.append(("fig4", fig34_mixed.run(3)["ok"]))
+    print("\n=== Fig 5: DeepBench-analog, 2 request streams ===")
+    results.append(("fig5", fig5_deepbench.run(False)["ok"]))
+    if args.with_hlo:
+        results.append(("fig5_hlo", fig5_deepbench.run(True)["ok"]))
+    print("\n=== Serving: per-stream observability ===")
+    results.append(("serving", serving.run()["ok"]))
+
+    if os.path.isdir(args.artifacts) and os.listdir(args.artifacts):
+        print("\n=== Roofline (from dry-run artifacts) ===")
+        from . import roofline
+
+        roofline.run(args.artifacts, md=False)
+
+    print("\nsummary:", {k: ("PASS" if v else "FAIL") for k, v in results})
+    sys.exit(0 if all(v for _, v in results) else 1)
+
+
+if __name__ == "__main__":
+    main()

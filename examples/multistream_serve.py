@@ -1,0 +1,60 @@
+"""Multi-stream serving with per-request stat tracking.
+
+    PYTHONPATH=src python examples/multistream_serve.py
+
+Eight heterogeneous requests share a 4-slot continuous-batching engine;
+each request is a stream, and the engine reports per-stream prefill/decode
+latency, token counts, and KV-cache bytes — then shows the aggregate-only
+view the paper argues is insufficient.
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.stats import AccessOutcome, AccessType
+from repro.models import init_params, model_defs
+from repro.serve import Engine, Request, ServeConfig
+
+
+def main() -> None:
+    cfg = get_smoke_config("deepseek-7b")
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(0), cfg.param_jdtype())
+    eng = Engine(cfg, params, ServeConfig(n_slots=4, max_len=128))
+
+    rng = np.random.default_rng(0)
+    profiles = [(8, 4), (8, 32), (16, 8), (24, 16), (8, 8), (16, 24), (8, 16), (12, 6)]
+    reqs = []
+    for i, (plen, gen) in enumerate(profiles):
+        r = Request(
+            prompt=rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32),
+            max_new_tokens=gen,
+            name=f"req{i}",
+        )
+        reqs.append(r)
+        eng.submit(r)
+
+    eng.run_until_idle()
+
+    print("per-stream report (the paper's feature):")
+    report = eng.per_stream_report()
+    for r in reqs:
+        s = report[r.stream_id]
+        print(f"  {r.name:6s} stream={r.stream_id:2d} prompt={len(r.prompt):3d} "
+              f"generated={len(r.generated):3d} prefill={r.prefill_s*1e3:8.1f}ms "
+              f"decode={r.decode_s*1e3:8.1f}ms kv_bytes={int(s['kv_bytes']):8d}")
+
+    agg = eng.table.aggregate()
+    total = int(agg[AccessType.KV_ACC_W, AccessOutcome.MISS])
+    print(f"\naggregate-only view (what unmodified stat tracking reports): "
+          f"kv_bytes={total} — per-request behaviour invisible")
+    print(f"invariant Σ per-stream == aggregate: "
+          f"{sum(int(v['kv_bytes']) for v in report.values()) == total}")
+
+
+if __name__ == "__main__":
+    main()

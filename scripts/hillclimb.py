@@ -1,0 +1,76 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 --xla_backend_optimization_level=0"
+import json
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch.dryrun import run_cell
+from repro.launch.shardings import PlanOverrides
+
+OUT = "artifacts/perf"
+
+# TP-off pure-FSDP(256) layout: every param dim that wanted "model" falls
+# back; embed shards over both axes; batch data-parallel over all 256 chips.
+TP_OFF = dict(
+    param_rules={
+        "heads": None, "kv_heads": None, "mlp": None, "experts": None,
+        "embed": ("data", "model"), "vocab": "model",
+    },
+    act_rules={
+        "batch": ("data", "model"), "act_heads": None, "act_kv_heads": None,
+        "act_mlp": None, "vocab_logits": "model", "experts": None,
+    },
+)
+
+EXPERIMENTS = {
+    # --- Cell A: deepseek-7b train_4k pod1 (framework-representative) -------
+    "A1_mb4": ("deepseek-7b", "train_4k", PlanOverrides(microbatches=4)),
+    "A2_tp_off_fsdp256": (
+        "deepseek-7b", "train_4k",
+        PlanOverrides(microbatches=1, **TP_OFF),
+    ),
+    "A3_tp_off_mb4": (
+        "deepseek-7b", "train_4k",
+        PlanOverrides(microbatches=4, **TP_OFF),
+    ),
+    "A5_tp_off_bf16_rs": (
+        "deepseek-7b", "train_4k",
+        PlanOverrides(microbatches=1, accum_dtype="bfloat16", **TP_OFF),
+    ),
+    # --- Cell B: jamba-1.5 train_4k pod1 (worst roofline cell) --------------
+    "B2_ssd128": ("jamba-1.5-large-398b", "train_4k", PlanOverrides(ssd_chunk=128)),
+    "B3_accum_bf16": ("jamba-1.5-large-398b", "train_4k", PlanOverrides(accum_dtype="bfloat16")),
+    "B4_mb4": ("jamba-1.5-large-398b", "train_4k", PlanOverrides(microbatches=4)),
+    "B5_combo": (
+        "jamba-1.5-large-398b", "train_4k",
+        PlanOverrides(ssd_chunk=128, accum_dtype="bfloat16", microbatches=4),
+    ),
+    # --- Cell C: qwen2-72b decode_32k pod1 (serving-representative) ---------
+    "C0_seq_shard_cache": ("qwen2-72b", "decode_32k", PlanOverrides()),  # code change: kv-head-replication fix
+    "C1_kv_fp8": ("qwen2-72b", "decode_32k", PlanOverrides(kv_cache_dtype="float8_e4m3fn")),
+    "C2_scan_loop": ("qwen2-72b", "decode_32k", PlanOverrides(decode_loop="scan")),
+    # --- A4/B: larger flash kv tiles is a code-default change; rerun baselines
+    "A4_flash_tiles": ("deepseek-7b", "train_4k", PlanOverrides()),
+    "B0_rebase": ("jamba-1.5-large-398b", "train_4k", PlanOverrides()),
+}
+
+
+def main():
+    names = sys.argv[1:] or list(EXPERIMENTS)
+    for name in names:
+        arch, shape, ov = EXPERIMENTS[name]
+        print(f"=== {name}: {arch} {shape} ===", flush=True)
+        rec = run_cell(arch, shape, "pod1", overrides=ov, out_dir=OUT, verbose=False, tag=name)
+        if rec["status"] == "ok":
+            la = rec["loop_aware"]
+            print(json.dumps({
+                "tag": name,
+                "peak_GiB": round(rec["memory"]["peak_bytes_est"] / 2**30, 2),
+                "compute_s": round(la["flops"] / 197e12, 4),
+                "memory_s": round(la["hbm_bytes"] / 819e9, 4),
+                "collective_s": round(la["collective_wire_bytes"] / 50e9, 4),
+            }), flush=True)
+
+
+if __name__ == "__main__":
+    main()

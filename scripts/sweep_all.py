@@ -1,0 +1,35 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 --xla_backend_optimization_level=0"
+import sys, time
+sys.path.insert(0, "src")
+from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
+from repro.launch.dryrun import run_cell
+
+# order: decode/long first (seconds), then prefill, then train small->large
+archs = list_archs()
+sizes = {a: get_config(a).param_count() for a in archs}
+cells = []
+for kind in ("decode", "prefill", "train"):
+    for arch in sorted(archs, key=lambda a: sizes[a]):
+        for shape_name in applicable_shapes(get_config(arch)):
+            if SHAPES[shape_name].kind != kind:
+                continue
+            for mesh in ("pod1", "pod2"):
+                cells.append((arch, shape_name, mesh))
+print(f"total cells: {len(cells)}", flush=True)
+t0 = time.time()
+fails = 0
+for i, (arch, shape_name, mesh) in enumerate(cells):
+    art = f"artifacts/dryrun/{arch}__{shape_name}__{mesh}.json"
+    if os.path.exists(art):
+        import json
+        if json.load(open(art)).get("status") == "ok":
+            continue
+    print(f"--- [{i+1}/{len(cells)}] {arch} {shape_name} {mesh} (t+{(time.time()-t0)/60:.1f}m)", flush=True)
+    try:
+        rec = run_cell(arch, shape_name, mesh, out_dir="artifacts/dryrun", verbose=False)
+        fails += rec["status"] != "ok"
+    except Exception as e:
+        print("DRIVER ERROR:", e, flush=True)
+        fails += 1
+print(f"SWEEP DONE fails={fails} wall={(time.time()-t0)/60:.1f}m", flush=True)

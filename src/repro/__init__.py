@@ -1,0 +1,10 @@
+"""repro — per-stream stat tracking in a multi-pod JAX framework.
+
+Reproduction of "Integrating Per-Stream Stat Tracking into Accel-Sim"
+(Qiao, Su, Sinclair; 2023) as production observability infrastructure:
+``repro.core`` is the paper's contribution, ``repro.sim`` the simulator it
+instruments, and the surrounding packages the training/serving framework
+whose streams it tracks.
+"""
+
+__version__ = "1.0.0"

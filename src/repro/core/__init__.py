@@ -1,0 +1,49 @@
+"""Per-stream stat tracking — the paper's contribution as a composable library.
+
+Public API:
+
+    from repro.core import (
+        AccessType, AccessOutcome, FailOutcome,
+        StatTable, CleanStatTable,
+        KernelTimeline, KernelTime,
+        Stream, StreamManager,
+        StreamStats, StepCost, stream_scope, current_stream,
+        StatCollector,
+    )
+"""
+
+from .stats import (
+    DEFAULT_STREAM,
+    AccessOutcome,
+    AccessType,
+    CleanStatTable,
+    FailOutcome,
+    StatTable,
+)
+from .timeline import KernelTime, KernelTimeline
+from .stream import Stream, StreamEvent, StreamManager, WorkItem
+from .instrument import StepCost, StepRecord, StreamStats, current_stream, stream_scope
+from .collector import StatCollector, namespace_stream, split_namespaced
+
+__all__ = [
+    "DEFAULT_STREAM",
+    "AccessOutcome",
+    "AccessType",
+    "CleanStatTable",
+    "FailOutcome",
+    "StatTable",
+    "KernelTime",
+    "KernelTimeline",
+    "Stream",
+    "StreamEvent",
+    "StreamManager",
+    "WorkItem",
+    "StepCost",
+    "StepRecord",
+    "StreamStats",
+    "current_stream",
+    "stream_scope",
+    "StatCollector",
+    "namespace_stream",
+    "split_namespaced",
+]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+The paper itself is stat-tracking infrastructure (no kernel contribution);
+these kernels serve the model substrate: ``flash_attention`` (tiled
+online-softmax attention) and ``ssd_scan`` (Mamba-2 chunked state-space
+scan), each with a jit'd dispatch wrapper (``ops``) and a pure-jnp oracle
+(``ref``) used by the interpret-mode sweep tests.
+"""
+
+from . import ops, ref
+from .ops import decode_attention, flash_attention, ssd_scan
+
+__all__ = ["ops", "ref", "decode_attention", "flash_attention", "ssd_scan"]

@@ -1,0 +1,168 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+The SSD (state-space duality) algorithm splits the linear recurrence
+
+    h_t = exp(A·dt_t)·h_{t-1} + dt_t·(x_t ⊗ B_t);   y_t = C_t·h_t + D·x_t
+
+into MXU-shaped block work per chunk of length L:
+
+    intra-chunk   Y₁ = (tril(C·Bᵀ ⊙ decay) ⊙ dt) @ X          (L×L @ L×P)
+    inter-chunk   Y₂ = (C ⊙ exp(cum)) @ h_prevᵀ               (L×N @ N×P)
+    state update  h  = exp(cum_L)·h + Xᵀ @ (B ⊙ seg·dt)        (P×L @ L×N)
+
+The original CUDA kernel leans on warp shuffles for the cumulative decay;
+on TPU we restructure it as whole-chunk vector cumsums (VPU) plus three
+MXU matmuls — the TPU-native form of the same math (DESIGN.md §6).
+
+Grid: ``(batch, heads, chunks)`` with chunks innermost/sequential; the
+running state ``h (P×N fp32)`` lives in VMEM scratch carried across chunk
+iterations.  VMEM per step at L=128, P=64, N=128:
+x(L×P) + B,C(L×N) + M(L×L) + h(P×N fp32) ≈ 0.2 MB.
+
+Outputs: per-position y (B,H,S,P) and the final state (B,H,P,N) — the
+latter hands off to the decode path / chunked prefill.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+__all__ = ["ssd_scan_pallas"]
+
+
+def _ssd_kernel(
+    x_ref,  # (1, 1, L, P)
+    dt_ref,  # (1, 1, L)
+    a_ref,  # (1,)            per-head decay rate A (negative)
+    b_ref,  # (1, 1, L, N)
+    c_ref,  # (1, 1, L, N)
+    d_ref,  # (1,)            skip gain
+    h0_ref,  # (1, 1, P, N)   initial state
+    y_ref,  # (1, 1, L, P)
+    hout_ref,  # (1, 1, P, N)
+    h_scr,  # (P, N) fp32 running state
+    *,
+    L: int,
+):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # (L, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (L,)
+    A = a_ref[0].astype(jnp.float32)  # scalar
+    Bm = b_ref[0, 0].astype(jnp.float32)  # (L, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)  # (L, N)
+
+    a = A * dt  # (L,) log-decay per step
+    cum = jnp.cumsum(a)  # s_t
+
+    # --- intra-chunk: M[t,s] = (C_t·B_s)·exp(s_t−s_s)·dt_s, s ≤ t ------------
+    CB = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, L)
+    diff = cum[:, None] - cum[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    tri = rows >= cols
+    # clamp masked entries before exp (they can overflow; and keeps the
+    # kernel bit-consistent with the differentiable jnp form)
+    diff = jnp.where(tri, diff, -jnp.inf)
+    M = jnp.where(tri, CB, 0.0) * jnp.exp(diff) * dt[None, :]
+    y = jax.lax.dot_general(
+        M, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, P)
+
+    # --- inter-chunk: y += (C ⊙ exp(cum)) @ hᵀ --------------------------------
+    h_prev = h_scr[...]
+    Ce = Cm * jnp.exp(cum)[:, None]
+    y = y + jax.lax.dot_general(
+        Ce, h_prev, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # --- state update: h = exp(s_L)·h + Xᵀ @ (B ⊙ exp(s_L−s)·dt) -------------
+    seg = jnp.exp(cum[-1] - cum) * dt  # (L,)
+    Bw = Bm * seg[:, None]
+    h_scr[...] = h_prev * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        x, Bw, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # --- skip connection + writes ---------------------------------------------
+    Dg = d_ref[0].astype(jnp.float32)
+    y_ref[0, 0] = (y + Dg * x).astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        hout_ref[0, 0] = h_scr[...].astype(hout_ref.dtype)
+
+
+def ssd_scan_pallas(
+    x: jax.Array,  # (B, H, S, P)
+    dt: jax.Array,  # (B, H, S)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, G, S, N)
+    Cm: jax.Array,  # (B, G, S, N)
+    D: Optional[jax.Array] = None,  # (H,)
+    h0: Optional[jax.Array] = None,  # (B, H, P, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Head-major chunked SSD.  Returns (y (B,H,S,P), h_final (B,H,P,N))."""
+    B, H, S, P = x.shape
+    _, G, _, N = Bm.shape
+    assert H % G == 0, (H, G)
+    L = min(chunk, S)
+    if S % L != 0:
+        raise ValueError(f"seq len {S} must be a multiple of chunk {L}")
+    nc = S // L
+    group = H // G
+
+    if D is None:
+        D = jnp.zeros((H,), jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    kern = functools.partial(_ssd_kernel, L=L)
+    grid = (B, H, nc)
+
+    y, h_final = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, L, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, L), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, L, N), lambda b, h, c, g=group: (b, h // g, c, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda b, h, c, g=group: (b, h // g, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[_VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, D, h0)
+    return y, h_final

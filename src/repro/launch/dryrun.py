@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell and record memory/cost/collective evidence.
+
+MUST be the process entry point (device count locks at first jax init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell, 1-pod + 2-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod1
+
+Artifacts land in ``artifacts/dryrun/<arch>__<shape>__<mesh>.json`` and feed
+``benchmarks/roofline.py`` (EXPERIMENTS.md §Dry-run/§Roofline).
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
+from repro.launch.mesh import make_production_mesh, make_tiny_mesh
+from repro.launch.shardings import PlanOverrides
+from repro.launch.steps import build_cell
+from repro.perf.hlo import summarize_compiled
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh_name: str,
+    *,
+    overrides: PlanOverrides = PlanOverrides(),
+    out_dir: Optional[str] = None,
+    verbose: bool = True,
+    tag: str = "",
+) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if mesh_name == "pod1":
+        mesh = make_production_mesh(multi_pod=False)
+    elif mesh_name == "pod2":
+        mesh = make_production_mesh(multi_pod=True)
+    elif mesh_name == "tiny":
+        mesh = make_tiny_mesh()
+    elif mesh_name == "tiny2":
+        mesh = make_tiny_mesh(multi_pod=True)
+    else:
+        raise ValueError(f"unknown mesh {mesh_name}")
+
+    t0 = time.time()
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "step": None,
+        "status": "error",
+    }
+    try:
+        cell = build_cell(arch, cfg, shape, mesh, overrides=overrides)
+        record["step"] = cell.step_name
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def named(tree):
+            return jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+            )
+
+        in_shardings = tuple(named(s) for s in cell.in_shardings)
+        with mesh:
+            jitted = jax.jit(
+                cell.fn,
+                in_shardings=in_shardings,
+                donate_argnums=cell.donate_argnums,
+            )
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo_text = compiled.as_text()
+            summary = summarize_compiled(compiled, hlo_text)
+            # loop-aware re-count: XLA's cost_analysis counts while bodies
+            # once; scan-built steps need trip-count multiplication
+            from repro.perf.hlo_cost_model import analyze_hlo_text
+
+            loop_aware = analyze_hlo_text(hlo_text)
+        if verbose:
+            print(f"  memory_analysis: {mem}")
+            print(f"  cost_analysis: flops={cost.get('flops', 0):.3e} "
+                  f"bytes={cost.get('bytes accessed', 0):.3e}")
+        record.update(
+            status="ok",
+            chips=cell.chips,
+            model_flops_total=cell.model_flops,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            summary=summary.to_dict(),
+            loop_aware=loop_aware.to_dict(),
+            memory={
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "alias_bytes": int(mem.alias_size_in_bytes),
+                "code_bytes": int(mem.generated_code_size_in_bytes),
+                "peak_bytes_est": int(
+                    mem.argument_size_in_bytes
+                    + max(mem.output_size_in_bytes - mem.alias_size_in_bytes, 0)
+                    + mem.temp_size_in_bytes
+                ),
+            },
+        )
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc(limit=20)
+        if verbose:
+            print(record["traceback"], file=sys.stderr)
+    record["wall_s"] = round(time.time() - t0, 2)
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+    status = record["status"]
+    line = f"[{status:5s}] {arch:26s} {shape_name:12s} {mesh_name:5s} wall={record['wall_s']:7.1f}s"
+    if status == "ok":
+        gb = record["memory"]["peak_bytes_est"] / 2**30
+        line += (f" peak={gb:6.2f}GiB/dev flops/dev={record['loop_aware']['flops']:.2e}"
+                 f" coll={record['loop_aware']['collective_wire_bytes']:.2e}B")
+    print(line, flush=True)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=["pod1", "pod2", "tiny", "tiny2"])
+    ap.add_argument("--multi-pod", action="store_true", help="alias for --mesh pod2")
+    ap.add_argument("--all", action="store_true", help="every applicable cell")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="", help="artifact suffix for perf experiments")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--remat", default=None, choices=[None, "none", "dots", "full"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--kv-cache-dtype", default=None)
+    ap.add_argument("--decode-loop", default=None, choices=[None, "inplace", "scan"])
+    ap.add_argument("--ssd-chunk", type=int, default=None)
+    ap.add_argument("--accum-dtype", default=None)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    overrides = PlanOverrides(
+        fsdp=not args.no_fsdp, remat=args.remat, microbatches=args.microbatches,
+        kv_cache_dtype=args.kv_cache_dtype, decode_loop=args.decode_loop,
+        ssd_chunk=args.ssd_chunk, accum_dtype=args.accum_dtype,
+    )
+
+    if args.all:
+        meshes = [args.mesh] if args.mesh else ["pod1", "pod2"]
+        failures = 0
+        for arch in list_archs():
+            cfg = get_config(arch)
+            for shape_name in applicable_shapes(cfg):
+                for mesh_name in meshes:
+                    rec = run_cell(
+                        arch, shape_name, mesh_name,
+                        overrides=overrides, out_dir=args.out,
+                        verbose=not args.quiet, tag=args.tag,
+                    )
+                    failures += rec["status"] != "ok"
+        print(f"dry-run sweep complete; failures={failures}")
+        sys.exit(1 if failures else 0)
+
+    mesh_name = args.mesh or ("pod2" if args.multi_pod else "pod1")
+    rec = run_cell(
+        args.arch, args.shape, mesh_name,
+        overrides=overrides, out_dir=args.out, verbose=not args.quiet, tag=args.tag,
+    )
+    sys.exit(0 if rec["status"] == "ok" else 1)
+
+
+if __name__ == "__main__":
+    main()

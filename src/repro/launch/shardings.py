@@ -1,0 +1,170 @@
+"""Sharding policy: logical-axis rules per (config × shape × mesh).
+
+One function — :func:`make_plan` — returns everything a step needs:
+
+* ``param_specs``   PartitionSpec tree for parameters (FSDP over "data",
+  TP/EP over "model", divisibility-checked),
+* ``opt_specs``     matching specs for AdamW state,
+* ``act_rules``     logical→mesh mapping installed around the jitted step
+  (``repro.models.act_sharding``),
+* ``batch_specs``   input-batch PartitionSpecs,
+* ``cache_specs``   decode-cache PartitionSpec tree (KV batch-sharded; for
+  ``long_500k`` the cache sequence axis rides "data" — sequence parallelism
+  — because global_batch=1 leaves the DP axes idle).
+
+Overrides (the §Perf hillclimbing levers) are threaded through
+``PlanOverrides`` so experiments are config-only diffs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model_defs
+from repro.models.params import DEFAULT_RULES, ParamDef, logical_to_pspec, param_pspecs
+from .mesh import dp_axes, mesh_axis_sizes
+
+__all__ = ["ShardingPlan", "PlanOverrides", "make_plan"]
+
+
+@dataclass(frozen=True)
+class PlanOverrides:
+    """Hillclimbing levers (all optional)."""
+
+    param_rules: Dict[str, Any] = field(default_factory=dict)  # logical→axis overrides
+    act_rules: Dict[str, Any] = field(default_factory=dict)
+    fsdp: bool = True  # shard params over "data" (ZeRO-3) or replicate
+    seq_shard_long: bool = True  # long-context: cache seq on "data"
+    remat: Optional[str] = None  # override cfg.remat
+    microbatches: Optional[int] = None
+    kv_cache_dtype: Optional[str] = None  # e.g. "float8_e4m3fn"
+    decode_loop: Optional[str] = None  # "inplace" | "scan"
+    ssd_chunk: Optional[int] = None  # SSD chunk length override
+    accum_dtype: Optional[str] = None  # grad accumulator dtype
+
+
+@dataclass
+class ShardingPlan:
+    mesh: Mesh
+    param_specs: Any
+    act_rules: Dict[str, Any]
+    batch_rule: P
+    cache_specs_fn: Any  # callable(cache_tree) -> spec tree
+    dp: Tuple[str, ...]
+    long_context: bool
+
+    def named(self, spec_tree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s),
+            spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+
+def _divides(dim: int, mesh_sizes: Dict[str, int], assignment) -> Optional[Any]:
+    if assignment is None:
+        return None
+    axes = (assignment,) if isinstance(assignment, str) else tuple(assignment)
+    prod = 1
+    ok = []
+    for a in axes:
+        s = mesh_sizes.get(a)
+        if s is None:
+            continue
+        if dim % (prod * s) == 0:
+            ok.append(a)
+            prod *= s
+    if not ok:
+        return None
+    return ok[0] if len(ok) == 1 else tuple(ok)
+
+
+def make_plan(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    overrides: PlanOverrides = PlanOverrides(),
+) -> ShardingPlan:
+    sizes = mesh_axis_sizes(mesh)
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([sizes[a] for a in dp]))
+    long_context = shape.kind == "decode" and shape.global_batch < dp_size
+
+    # ---------------- parameter rules -------------------------------------------
+    rules = dict(DEFAULT_RULES)
+    rules["batch"] = dp
+    if not overrides.fsdp:
+        rules["embed"] = None
+    rules.update(overrides.param_rules)
+    defs = model_defs(cfg)
+    param_specs = param_pspecs(defs, rules, mesh)
+
+    # ---------------- activation rules -------------------------------------------
+    act_rules: Dict[str, Any] = {
+        "__axis_sizes__": sizes,
+        "batch": dp if not long_context else None,
+        "seq": None,
+        "act_embed": None,
+        "act_heads": "model",
+        "act_kv_heads": "model",
+        "act_mlp": "model",
+        "vocab_logits": "model",
+        "experts": "model",
+    }
+    act_rules.update(overrides.act_rules)
+
+    # ---------------- batch inputs -------------------------------------------------
+    batch_rule = P(dp if not long_context else None)
+
+    # ---------------- decode-cache specs --------------------------------------------
+    seq_axis = "data" if (long_context and overrides.seq_shard_long) else None
+    batch_axis = dp if not long_context else None
+
+    def cache_specs(cache_tree):
+        def leaf_spec(path, leaf) -> P:
+            keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+            name = keys[-1]
+            stacked = "blocks" in keys  # leading superblock-repeat axis
+            lead = (None,) if stacked else ()
+            shp = leaf.shape[1:] if stacked else leaf.shape
+
+            def dv(dim, a):
+                return _divides(dim, sizes, a)
+
+            if name in ("k", "v"):  # (B, S, Hkv, hd)
+                heads_ax = dv(shp[2], "model")
+                # kv heads not divisible by the TP axis (e.g. qwen2's 8 kv
+                # heads on a 16-wide model axis) would replicate the cache
+                # 16× — shard the cache *sequence* over "model" instead
+                seq_ax = dv(shp[1], seq_axis) if heads_ax is not None else (
+                    dv(shp[1], seq_axis) or dv(shp[1], "model")
+                )
+                spec = (dv(shp[0], batch_axis), seq_ax, heads_ax, None)
+            elif name == "ckv":  # (B, S, C) — MLA latent: no head dim, shard seq
+                spec = (dv(shp[0], batch_axis), dv(shp[1], seq_axis) or dv(shp[1], "model"), None)
+            elif name in ("conv_x", "conv_B", "conv_C"):  # (B, W-1, ...)
+                spec = (dv(shp[0], batch_axis),) + (None,) * (len(shp) - 1)
+            elif name == "h":  # (B, H, P, N)
+                spec = (dv(shp[0], batch_axis), dv(shp[1], "model"), None, None)
+            else:
+                spec = (None,) * len(shp)
+            return P(*(lead + tuple(spec)))
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+        return jax.tree_util.tree_unflatten(treedef, [leaf_spec(p, l) for p, l in flat])
+
+    return ShardingPlan(
+        mesh=mesh,
+        param_specs=param_specs,
+        act_rules=act_rules,
+        batch_rule=batch_rule,
+        cache_specs_fn=cache_specs,
+        dp=dp,
+        long_context=long_context,
+    )

@@ -1,0 +1,195 @@
+"""Jittable step builders + abstract input specs for every (arch × shape).
+
+``build_cell`` returns everything the dry-run (and a real launch) needs for
+one cell: the step callable, abstract example args (ShapeDtypeStructs — no
+allocation, 398B params stay virtual), and in/out shardings + donation.
+
+Step selection per shape kind (assignment rules):
+  train_*   → train_step   (fwd+bwd+AdamW, grad-accum microbatches)
+  prefill_* → prefill_step (forward + cache emission, no grad)
+  decode_* / long_* → serve_step (one token through the full stack + cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+from repro.models import (
+    abstract_params,
+    activation_sharding,
+    decode_step,
+    init_cache,
+    model_defs,
+    prefill,
+)
+from repro.models.params import ParamDef
+from repro.optim import adamw_init
+from repro.train.trainer import TrainConfig, make_train_step
+from .shardings import PlanOverrides, ShardingPlan, make_plan
+from .mesh import mesh_axis_sizes
+
+__all__ = ["CellSpec", "build_cell", "default_microbatches", "model_flops_for_cell"]
+
+
+@dataclass
+class CellSpec:
+    arch: str
+    shape: ShapeConfig
+    step_name: str  # train_step | prefill_step | serve_step
+    fn: Callable
+    args: Tuple[Any, ...]  # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...]
+    plan: ShardingPlan
+    chips: int
+    model_flops: float  # 6·N·D / 2·N·D for this cell (all chips)
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig, dp_size: int) -> int:
+    if shape.kind != "train":
+        return 1
+    per_dp = max(1, shape.global_batch // dp_size)
+    n = cfg.param_count()
+    target_mb = 1 if n >= 5e9 else (2 if n >= 1e9 else 4)
+    return max(1, per_dp // target_mb)
+
+
+def model_flops_for_cell(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n_active = cfg.param_count(active_only=True)
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * n_active * shape.tokens
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype, sharding=sharding)
+
+
+def _batch_struct(cfg: ModelConfig, shape: ShapeConfig, plan: ShardingPlan, *, with_labels: bool):
+    """Abstract training/prefill batch for this architecture family."""
+    mesh = plan.mesh
+    B, S = shape.global_batch, shape.seq_len
+    bspec = NamedSharding(mesh, plan.batch_rule)
+    batch: Dict[str, Any] = {"tokens": _sds((B, S), jnp.int32, bspec)}
+    specs: Dict[str, Any] = {"tokens": plan.batch_rule}
+    if with_labels:
+        batch["labels"] = _sds((B, S), jnp.int32, bspec)
+        specs["labels"] = plan.batch_rule
+    if cfg.encdec:
+        batch["enc_embeds"] = _sds((B, S, cfg.d_model), cfg.compute_jdtype(), bspec)
+        specs["enc_embeds"] = plan.batch_rule
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = _sds(
+            (B, cfg.vision_tokens, cfg.d_model), cfg.compute_jdtype(), bspec
+        )
+        specs["vision_embeds"] = plan.batch_rule
+    return batch, specs
+
+
+def build_cell(
+    arch: str,
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    *,
+    overrides: PlanOverrides = PlanOverrides(),
+    tcfg: Optional[TrainConfig] = None,
+    attn_impl: str = "auto",
+) -> CellSpec:
+    plan = make_plan(cfg, shape, mesh, overrides)
+    sizes = mesh_axis_sizes(mesh)
+    chips = int(np.prod(list(sizes.values())))
+    dp_size = int(np.prod([sizes[a] for a in plan.dp]))
+    from dataclasses import replace as _rp
+
+    cfg_updates = {}
+    if overrides.remat is not None:
+        cfg_updates["remat"] = overrides.remat
+    if overrides.kv_cache_dtype is not None:
+        cfg_updates["kv_cache_dtype"] = overrides.kv_cache_dtype
+    if overrides.decode_loop is not None:
+        cfg_updates["decode_loop"] = overrides.decode_loop
+    if overrides.ssd_chunk is not None and cfg.ssm is not None:
+        cfg_updates["ssm"] = _rp(cfg.ssm, chunk=overrides.ssd_chunk)
+    if cfg_updates:
+        cfg = _rp(cfg, **cfg_updates)
+
+    defs = model_defs(cfg)
+    params_abs = abstract_params(defs, cfg.param_jdtype())
+    pspecs = plan.param_specs
+    mf = model_flops_for_cell(cfg, shape)
+
+    def with_rules(fn):
+        @functools.wraps(fn)
+        def wrapped(*args):
+            with activation_sharding(plan.act_rules):
+                return fn(*args)
+
+        return wrapped
+
+    if shape.kind == "train":
+        n_micro = (
+            overrides.microbatches
+            if overrides.microbatches is not None
+            else default_microbatches(cfg, shape, dp_size)
+        )
+        tcfg = tcfg or TrainConfig(
+            microbatches=n_micro, accum_dtype=overrides.accum_dtype or "float32"
+        )
+        step = with_rules(make_train_step(cfg, tcfg))
+        opt_abs = jax.eval_shape(
+            lambda p: adamw_init(p, jnp.dtype(cfg.opt_state_dtype)), params_abs
+        )
+        opt_specs = {
+            "m": jax.tree_util.tree_map(lambda s: s, pspecs),
+            "v": jax.tree_util.tree_map(lambda s: s, pspecs),
+            "step": P(),
+        }
+        batch, batch_specs = _batch_struct(cfg, shape, plan, with_labels=True)
+        return CellSpec(
+            arch, shape, "train_step", step,
+            (params_abs, opt_abs, batch),
+            (pspecs, opt_specs, batch_specs),
+            donate_argnums=(0, 1),
+            plan=plan, chips=chips, model_flops=mf,
+        )
+
+    if shape.kind == "prefill":
+        step = with_rules(lambda p, b: prefill(cfg, p, b, attn_impl=attn_impl))
+        batch, batch_specs = _batch_struct(cfg, shape, plan, with_labels=False)
+        return CellSpec(
+            arch, shape, "prefill_step", step,
+            (params_abs, batch),
+            (pspecs, batch_specs),
+            donate_argnums=(),
+            plan=plan, chips=chips, model_flops=mf,
+        )
+
+    # decode / long-context decode: one new token against a seq_len cache
+    B = shape.global_batch
+    max_len = shape.seq_len + (cfg.vision_tokens or 0)
+    enc_len = shape.seq_len if cfg.encdec else 0
+    cache_abs = jax.eval_shape(lambda: init_cache(cfg, B, max_len, enc_len=enc_len))
+    cache_specs = plan.cache_specs_fn(cache_abs)
+    io_rule = P(plan.dp if not plan.long_context else None)
+    step = with_rules(lambda p, c, t, q: decode_step(cfg, p, c, t, q, attn_impl=attn_impl))
+    args = (
+        params_abs,
+        cache_abs,
+        _sds((B,), jnp.int32, NamedSharding(plan.mesh, io_rule)),
+        _sds((B,), jnp.int32, NamedSharding(plan.mesh, io_rule)),
+    )
+    return CellSpec(
+        arch, shape, "serve_step", step,
+        args,
+        (pspecs, cache_specs, io_rule, io_rule),
+        donate_argnums=(1,),
+        plan=plan, chips=chips, model_flops=mf,
+    )

@@ -1,0 +1,38 @@
+"""Model substrate: composable layers + the generic multi-family LM."""
+
+from .params import (
+    DEFAULT_RULES,
+    ParamDef,
+    abstract_params,
+    init_params,
+    param_pspecs,
+    tree_bytes,
+    tree_size,
+)
+from .act_sharding import activation_sharding, constrain
+from .transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    model_defs,
+    num_layers_in_stack,
+    prefill,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "ParamDef",
+    "abstract_params",
+    "init_params",
+    "param_pspecs",
+    "tree_bytes",
+    "tree_size",
+    "activation_sharding",
+    "constrain",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "model_defs",
+    "num_layers_in_stack",
+    "prefill",
+]

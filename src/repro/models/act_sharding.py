@@ -1,0 +1,71 @@
+"""Activation-sharding constraints decoupled from model code.
+
+Models call :func:`constrain(x, "batch", "seq", None)` with *logical* axis
+names; the launcher installs a logical→mesh mapping for the duration of a
+jitted step via :func:`activation_sharding`.  Outside any mapping (CPU smoke
+tests) constraints are no-ops, so model code never depends on a mesh.
+
+This is also a hillclimbing lever: changing the activation rules (e.g.
+sequence-parallel norms, batch-sharded logits) is a one-line experiment in
+the perf loop.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Mapping, Optional, Union, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["activation_sharding", "constrain", "current_rules"]
+
+_RULES: contextvars.ContextVar[Optional[Mapping[str, object]]] = contextvars.ContextVar(
+    "activation_rules", default=None
+)
+
+
+def current_rules() -> Optional[Mapping[str, object]]:
+    return _RULES.get()
+
+
+@contextlib.contextmanager
+def activation_sharding(rules: Optional[Mapping[str, object]]):
+    token = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    parts = []
+    for dim, name in zip(x.shape, logical):
+        ax = rules.get(name) if name is not None else None
+        if ax is None:
+            parts.append(None)
+            continue
+        # drop non-divisible assignments (mesh sizes are in the rules' metadata)
+        sizes = rules.get("__axis_sizes__", {})
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        prod = 1
+        ok = []
+        for a in axes:
+            s = sizes.get(a, 1)
+            if dim % (prod * s) == 0:
+                ok.append(a)
+                prod *= s
+        if not ok:
+            parts.append(None)
+        elif len(ok) == 1:
+            parts.append(ok[0])
+        else:
+            parts.append(tuple(ok))
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*parts))
+    except Exception:
+        return x

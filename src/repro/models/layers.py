@@ -1,0 +1,130 @@
+"""Shared layer primitives: norms, GLU FFN, embeddings, RoPE."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .act_sharding import constrain
+from .params import ParamDef
+
+__all__ = [
+    "rmsnorm_defs",
+    "rmsnorm",
+    "ffn_defs",
+    "ffn_apply",
+    "embed_defs",
+    "embed_apply",
+    "logits_apply",
+    "rope",
+    "sinusoidal_positions",
+]
+
+
+# ----------------------------------------------------------------------- norms
+def rmsnorm_defs(d_model: int) -> Dict[str, ParamDef]:
+    # zeros-init "(1+g)" parameterisation (gemma-style) — identical to ones
+    # init under ordinary training, friendlier for zero-init overlays.
+    return {"scale": ParamDef((d_model,), (None,), "zeros")}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    return (xf * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+# ----------------------------------------------------------------------- FFN
+def ffn_defs(d_model: int, d_ff: int) -> Dict[str, ParamDef]:
+    return {
+        "wi_gate": ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "wi_up": ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "wo": ParamDef((d_ff, d_model), ("mlp", "embed"), init="out_proj"),
+    }
+
+
+def ffn_apply(params, x: jax.Array, act: str = "silu") -> jax.Array:
+    dtype = x.dtype
+    g = jnp.einsum("...d,df->...f", x, params["wi_gate"].astype(dtype))
+    u = jnp.einsum("...d,df->...f", x, params["wi_up"].astype(dtype))
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    h = constrain(g * u, "batch", "seq", "act_mlp")
+    return jnp.einsum("...f,fd->...d", h, params["wo"].astype(dtype))
+
+
+# ----------------------------------------------------------------------- embeddings
+def embed_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    # GPT-style 0.02 std: keeps tied-head logits O(1) at init (scale_embedding
+    # archs re-scale the *input* path by sqrt(d_model) themselves)
+    return {
+        "embedding": ParamDef(
+            (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), init="embed", scale=0.02
+        )
+    }
+
+
+def lm_head_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    return {"w": ParamDef((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"))}
+
+
+def embed_apply(params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = params["embedding"][tokens].astype(cfg.compute_jdtype())
+    if cfg.scale_embedding:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return x
+
+
+def logits_apply(params, head_params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Final projection in fp32 with padded-vocab masking."""
+    xf = x.astype(jnp.float32)
+    if cfg.tie_embeddings:
+        w = params["embedding"].astype(jnp.float32)
+        logits = jnp.einsum("...d,vd->...v", xf, w)
+    else:
+        logits = jnp.einsum("...d,dv->...v", xf, head_params["w"].astype(jnp.float32))
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e9, logits)
+    return constrain(logits, "batch", "seq", "vocab_logits")
+
+
+# ----------------------------------------------------------------------- RoPE
+def rope(
+    x: jax.Array,  # (..., S, H, D) or (..., H, D) with positions broadcast
+    positions: jax.Array,  # (..., S) int32
+    theta: float = 10_000.0,
+    rotary_dim: Optional[int] = None,
+) -> jax.Array:
+    """Rotary position embedding over the last ``rotary_dim`` features."""
+    D = x.shape[-1]
+    rd = rotary_dim or D
+    assert rd % 2 == 0
+    half = rd // 2
+    freq = jnp.exp(-jnp.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., S, half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    # broadcast over the head axis: x is (..., S, H, D)
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = xr[..., :half], xr[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rd < D else out
+
+
+def sinusoidal_positions(seq: int, d_model: int, dtype=jnp.float32) -> jax.Array:
+    """Whisper-style fixed positional embeddings for the (stubbed) encoder."""
+    half = d_model // 2
+    freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = jnp.arange(seq, dtype=jnp.float32)[:, None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)

@@ -1,0 +1,171 @@
+"""Mamba-2 block (SSD) — projections, causal depthwise conv, gated output.
+
+Sequence mixing runs through :func:`repro.kernels.ops.ssd_scan` (Pallas on
+TPU).  The decode path is the exact single-step recurrence over the carried
+``(conv window, SSD state)`` cache.
+
+Projections are split per tensor (x/z/B/C/dt) rather than fused, so each
+gets a clean logical sharding: heads on the TP axis, state dims replicated.
+The causal conv is expressed as ``width`` shifted multiplies (width=4) —
+VPU-friendly and trivially shardable, instead of a grouped convolution.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.kernels import ops
+from .act_sharding import constrain
+from .layers import rmsnorm_defs
+from .params import ParamDef
+
+__all__ = ["mamba_defs", "mamba_apply", "mamba_decode", "init_mamba_cache"]
+
+
+def mamba_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    s = cfg.ssm
+    assert s is not None
+    H = s.n_heads(cfg.d_model)
+    P, N, G, W = s.head_dim, s.d_state, s.n_groups, s.conv_width
+    return {
+        "w_z": ParamDef((cfg.d_model, H, P), ("embed", "ssm_heads", None)),
+        "w_x": ParamDef((cfg.d_model, H, P), ("embed", "ssm_heads", None)),
+        "w_B": ParamDef((cfg.d_model, G, N), ("embed", None, "ssm_state")),
+        "w_C": ParamDef((cfg.d_model, G, N), ("embed", None, "ssm_state")),
+        "w_dt": ParamDef((cfg.d_model, H), ("embed", "ssm_heads")),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), "zeros"),
+        "A_log": ParamDef((H,), ("ssm_heads",), "zeros"),  # A = -exp(A_log) → -1
+        "D": ParamDef((H,), ("ssm_heads",), "ones"),
+        "conv_x": ParamDef((W, H, P), ("conv", "ssm_heads", None), scale=0.5),
+        "conv_B": ParamDef((W, G, N), ("conv", None, "ssm_state"), scale=0.5),
+        "conv_C": ParamDef((W, G, N), ("conv", None, "ssm_state"), scale=0.5),
+        "gate_norm": rmsnorm_defs(H * P),
+        "out": ParamDef((H, P, cfg.d_model), ("ssm_heads", None, "embed"), init="out_proj"),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, window: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv as shifted multiplies.
+
+    u: (B, S, ...) input; w: (W, ...) taps (tap W-1 is the current step);
+    ``window``: (B, W-1, ...) left-context for chunked prefill/decode.
+    """
+    W = w.shape[0]
+    B = u.shape[0]
+    if window is None:
+        window = jnp.zeros((B, W - 1) + u.shape[2:], u.dtype)
+    ext = jnp.concatenate([window.astype(u.dtype), u], axis=1)  # (B, S+W-1, ...)
+    S = u.shape[1]
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(W):
+        out = out + ext[:, i : i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out).astype(u.dtype)
+
+
+def _project(params, x: jax.Array, cfg: ModelConfig):
+    dtype = x.dtype
+    z = jnp.einsum("...d,dhp->...hp", x, params["w_z"].astype(dtype))
+    xs = jnp.einsum("...d,dhp->...hp", x, params["w_x"].astype(dtype))
+    Bm = jnp.einsum("...d,dgn->...gn", x, params["w_B"].astype(dtype))
+    Cm = jnp.einsum("...d,dgn->...gn", x, params["w_C"].astype(dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("...d,dh->...h", x.astype(jnp.float32), params["w_dt"].astype(jnp.float32))
+        + params["dt_bias"].astype(jnp.float32)
+    )
+    return z, xs, Bm, Cm, dt
+
+
+def _gate_out(params, y: jax.Array, z: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Gated RMSNorm + output projection; y,z: (..., H, P)."""
+    lead = y.shape[:-2]
+    H, P = y.shape[-2:]
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))).reshape(lead + (H * P,))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(var + cfg.rms_eps)
+    g = g * (1.0 + params["gate_norm"]["scale"].astype(jnp.float32))
+    g = g.reshape(lead + (H, P)).astype(y.dtype)
+    return jnp.einsum("...hp,hpd->...d", g, params["out"].astype(y.dtype))
+
+
+def mamba_apply(
+    params,
+    x: jax.Array,  # (B, S, d_model)
+    cfg: ModelConfig,
+    *,
+    return_cache: bool = False,
+    ssd_impl: str = "auto",
+    conv_window: Optional[Dict[str, jax.Array]] = None,
+    h0: Optional[jax.Array] = None,
+):
+    """Full-sequence Mamba-2 mixing (training / prefill)."""
+    s = cfg.ssm
+    z, xs, Bm, Cm, dt = _project(params, x, cfg)
+    win = conv_window or {}
+    xs_c = _causal_conv(xs, params["conv_x"], win.get("x"))
+    Bm_c = _causal_conv(Bm, params["conv_B"], win.get("B"))
+    Cm_c = _causal_conv(Cm, params["conv_C"], win.get("C"))
+    xs_c = constrain(xs_c, "batch", "seq", "act_heads", None)
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, h = ops.ssd_scan(xs_c, dt, A, Bm_c, Cm_c, params["D"], h0=h0, chunk=s.chunk, impl=ssd_impl)
+    out = _gate_out(params, y, z, cfg)
+    if not return_cache:
+        return out
+    W = s.conv_width
+    cache = {
+        "conv_x": xs[:, -(W - 1) :],
+        "conv_B": Bm[:, -(W - 1) :],
+        "conv_C": Cm[:, -(W - 1) :],
+        "h": h,  # (B, H, P, N) fp32
+    }
+    return out, cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    s = cfg.ssm
+    H, P, N, G, W = s.n_heads(cfg.d_model), s.head_dim, s.d_state, s.n_groups, s.conv_width
+    return {
+        "conv_x": jnp.zeros((batch, W - 1, H, P), dtype),
+        "conv_B": jnp.zeros((batch, W - 1, G, N), dtype),
+        "conv_C": jnp.zeros((batch, W - 1, G, N), dtype),
+        "h": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def mamba_decode(
+    params,
+    x: jax.Array,  # (B, d_model)
+    cfg: ModelConfig,
+    cache: Dict[str, jax.Array],
+):
+    """One-token state update:  h ← e^{A·dt}h + dt·(x⊗B);  y = C·h + D·x."""
+    s = cfg.ssm
+    z, xs, Bm, Cm, dt = _project(params, x, cfg)  # (B,H,P) / (B,G,N) / (B,H)
+
+    # conv windows: append the new pre-conv features, convolve, slide.
+    def step_conv(win, new, w):
+        ext = jnp.concatenate([win.astype(new.dtype), new[:, None]], axis=1)  # (B, W, ...)
+        out = jnp.einsum("bw...,w...->b...", ext.astype(jnp.float32), w.astype(jnp.float32))
+        return jax.nn.silu(out).astype(new.dtype), ext[:, 1:]
+
+    xs_c, win_x = step_conv(cache["conv_x"], xs, params["conv_x"])
+    Bm_c, win_B = step_conv(cache["conv_B"], Bm, params["conv_B"])
+    Cm_c, win_C = step_conv(cache["conv_C"], Cm, params["conv_C"])
+
+    H = xs_c.shape[1]
+    G = Bm_c.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(Bm_c, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    Ch = jnp.repeat(Cm_c, rep, axis=1).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(A[None] * dt)  # (B,H)
+    h = cache["h"] * decay[..., None, None] + (
+        dt[..., None, None] * xs_c.astype(jnp.float32)[..., None] * Bh[:, :, None, :]
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch) + params["D"].astype(jnp.float32)[None, :, None] * xs_c.astype(jnp.float32)
+    out = _gate_out(params, y.astype(x.dtype), z, cfg)
+    return out, {"conv_x": win_x, "conv_B": win_B, "conv_C": win_C, "h": h}

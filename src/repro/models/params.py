@@ -1,0 +1,214 @@
+"""Parameter descriptors: one source of truth for shapes, init, and sharding.
+
+Every model builds a pytree of :class:`ParamDef` (shape + *logical* axis
+names + init recipe).  From that single tree we derive
+
+* materialized parameters (:func:`init_params`) — deterministic per-leaf
+  keys (path-hash fold-in, independent of traversal order),
+* ``PartitionSpec`` trees (:func:`param_pspecs`) via logical→mesh axis rules
+  with automatic divisibility fallback (e.g. phi3's 40 heads are not
+  divisible by a 16-wide model axis → that dim falls back to replicated and
+  FSDP still shards the ``embed`` dim),
+* abstract ``ShapeDtypeStruct`` trees for dry-run lowering without
+  allocation (:func:`abstract_params`).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ParamDef",
+    "LogicalRules",
+    "DEFAULT_RULES",
+    "init_params",
+    "abstract_params",
+    "param_pspecs",
+    "logical_to_pspec",
+    "tree_size",
+    "tree_bytes",
+]
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    """Declarative parameter: shape + logical axes + init."""
+
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | embed | out_proj
+    scale: Optional[float] = None  # stddev override for normal inits
+    dtype: Any = None  # overrides the model param dtype when set
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical_axes):
+            raise ValueError(f"axes {self.logical_axes} do not match shape {self.shape}")
+
+
+#: logical axis name → mesh axis (str), tuple of mesh axes, or None.
+LogicalRules = Mapping[str, Union[str, Tuple[str, ...], None]]
+
+#: Production rules (see DESIGN.md §4).  "embed" rides the FSDP (data) axis;
+#: head/mlp/expert/vocab dims ride the TP/EP (model) axis; batch rides
+#: (pod, data); long-context cache sequence rides data (SP).
+DEFAULT_RULES: Dict[str, Union[str, Tuple[str, ...], None]] = {
+    "batch": ("pod", "data"),
+    "embed": "data",  # FSDP param shard (all-gathered per superblock by XLA)
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "qk_dim": None,
+    "v_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": "data",  # within-expert Megatron MLP sharding
+    "kv_lora": None,
+    "seq": None,
+    "cache_seq": None,  # switched to "data" by the long-context policy
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv": None,
+    "layers": None,  # stacked superblock leading dim
+    "stack": None,
+}
+
+
+def _path_key(root: jax.Array, path: str) -> jax.Array:
+    h = int.from_bytes(hashlib.sha256(path.encode()).digest()[:4], "little")
+    return jax.random.fold_in(root, h)
+
+
+def _materialize(defn: ParamDef, key: jax.Array, default_dtype) -> jax.Array:
+    dtype = defn.dtype or default_dtype
+    shape = defn.shape
+    if defn.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if defn.init == "ones":
+        return jnp.ones(shape, dtype)
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    if defn.init == "embed":
+        std = defn.scale if defn.scale is not None else 1.0
+    elif defn.init == "out_proj":
+        # residual-branch output projections get depth-scaled-down init
+        std = defn.scale if defn.scale is not None else 0.02 / np.sqrt(2.0)
+    else:
+        std = defn.scale if defn.scale is not None else 1.0 / np.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(defs, key: jax.Array, default_dtype=jnp.float32):
+    """Materialize a ParamDef pytree with path-deterministic randomness."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    leaves = []
+    for path, defn in flat:
+        pstr = "/".join(str(p) for p in path)
+        leaves.append(_materialize(defn, _path_key(key, pstr), default_dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def abstract_params(defs, default_dtype=jnp.float32, shardings=None):
+    """ShapeDtypeStruct tree for .lower() without allocating 398B params."""
+    def one(path, d: ParamDef):
+        dt = d.dtype or default_dtype
+        sh = None
+        if shardings is not None:
+            sub = shardings
+            try:
+                for p in path:
+                    sub = sub[p.key if hasattr(p, "key") else p.idx]
+                sh = sub
+            except (KeyError, TypeError, IndexError):
+                sh = None
+        return jax.ShapeDtypeStruct(d.shape, dt, sharding=sh)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    return jax.tree_util.tree_unflatten(treedef, [one(p, d) for p, d in flat])
+
+
+def logical_to_pspec(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    rules: LogicalRules,
+    mesh_axis_sizes: Mapping[str, int],
+) -> P:
+    """Map logical axes → PartitionSpec, dropping non-divisible assignments.
+
+    A mesh axis may appear at most once in a spec; first (leftmost) logical
+    axis wins, later claims fall back to replicated.
+    """
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, logical_axes):
+        assignment = rules.get(name) if name is not None else None
+        if assignment is None:
+            parts.append(None)
+            continue
+        axes = (assignment,) if isinstance(assignment, str) else tuple(assignment)
+        # keep only mesh axes that exist, are unused, and divide the dim
+        chosen = []
+        prod = 1
+        for ax in axes:
+            size = mesh_axis_sizes.get(ax)
+            if size is None or ax in used:
+                continue
+            if dim % (prod * size) == 0:
+                chosen.append(ax)
+                prod *= size
+        for ax in chosen:
+            used.add(ax)
+        if not chosen:
+            parts.append(None)
+        elif len(chosen) == 1:
+            parts.append(chosen[0])
+        else:
+            parts.append(tuple(chosen))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_pspecs(defs, rules: LogicalRules, mesh: Mesh):
+    """PartitionSpec tree matching a ParamDef tree."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(d: ParamDef) -> P:
+        return logical_to_pspec(d.logical_axes, d.shape, rules, sizes)
+
+    return jax.tree_util.tree_map(one, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def tree_size(tree) -> int:
+    """Total element count (works on arrays, ShapeDtypeStructs, ParamDefs)."""
+    def n(x):
+        if isinstance(x, ParamDef):
+            return int(np.prod(x.shape)) if x.shape else 1
+        return int(np.prod(x.shape)) if hasattr(x, "shape") else 0
+
+    return sum(
+        n(l)
+        for l in jax.tree_util.tree_leaves(tree, is_leaf=lambda x: isinstance(x, ParamDef))
+    )
+
+
+def tree_bytes(tree, default_dtype=jnp.bfloat16) -> int:
+    def b(x):
+        if isinstance(x, ParamDef):
+            dt = x.dtype or default_dtype
+            return int(np.prod(x.shape)) * jnp.dtype(dt).itemsize
+        return x.size * x.dtype.itemsize if hasattr(x, "size") else 0
+
+    return sum(
+        b(l)
+        for l in jax.tree_util.tree_leaves(tree, is_leaf=lambda x: isinstance(x, ParamDef))
+    )

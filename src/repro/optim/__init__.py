@@ -1,0 +1,11 @@
+"""Optimizer substrate: AdamW, schedules, gradient compression."""
+
+from .adamw import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm, global_norm
+from .schedule import ScheduleConfig, learning_rate
+from .grad_compress import dequantize_int8, ef_compress, ef_state_init, quantize_int8, wire_bytes
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "clip_by_global_norm", "global_norm",
+    "ScheduleConfig", "learning_rate",
+    "dequantize_int8", "ef_compress", "ef_state_init", "quantize_int8", "wire_bytes",
+]

@@ -1,0 +1,59 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick for the gradient-accumulation / cross-replica path).
+
+Each microbatch gradient contribution is quantised to int8 with a per-tensor
+scale before entering the fp32 accumulator; the quantisation residual is
+carried in an error-feedback buffer and added to the next contribution
+(1-bit-Adam-style EF), so the *long-run* gradient is unbiased and training
+converges despite 4× less accumulation traffic.  On a real deployment the
+int8 tensors are what crosses DP replicas (reduce-scatter in int8, upcast
+after); under single-controller jit we model the same numerics and expose
+``wire_bytes`` for the roofline accounting.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "ef_compress", "ef_state_init", "wire_bytes"]
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_state_init(params) -> Any:
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress(grads, ef_state) -> Tuple[Any, Any]:
+    """(compressed-then-decompressed grads, new error-feedback state)."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return deq, corrected - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    deq = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return deq, new_e
+
+
+def wire_bytes(params) -> int:
+    """Bytes one compressed gradient exchange moves (int8 + scales)."""
+    leaves = jax.tree_util.tree_leaves(params)
+    return sum(l.size for l in leaves) + 4 * len(leaves)

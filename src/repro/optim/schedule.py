@@ -1,0 +1,31 @@
+"""LR schedules (pure functions of the step index)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+__all__ = ["ScheduleConfig", "learning_rate"]
+
+
+@dataclass(frozen=True)
+class ScheduleConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    kind: str = "cosine"  # cosine | linear | constant
+
+
+def learning_rate(step, cfg: ScheduleConfig):
+    s = jnp.asarray(step, jnp.float32)
+    warm = cfg.peak_lr * jnp.minimum(1.0, (s + 1.0) / max(cfg.warmup_steps, 1))
+    if cfg.kind == "constant":
+        return warm
+    t = jnp.clip((s - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.kind == "linear":
+        decay = 1.0 - (1.0 - cfg.min_lr_ratio) * t
+    else:  # cosine
+        decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(s < cfg.warmup_steps, warm, cfg.peak_lr * decay)

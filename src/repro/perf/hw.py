@@ -1,0 +1,29 @@
+"""Hardware constants for roofline analysis — TPU v5e (target part).
+
+These are the numbers mandated by the experiment harness:
+197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["TPU_V5E", "Chip"]
+
+
+@dataclass(frozen=True)
+class Chip:
+    name: str
+    peak_bf16_flops: float  # FLOP/s
+    hbm_bw: float  # B/s
+    ici_link_bw: float  # B/s per link
+    hbm_bytes: int  # capacity per chip
+
+
+TPU_V5E = Chip(
+    name="tpu_v5e",
+    peak_bf16_flops=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    hbm_bytes=16 * 2**30,
+)

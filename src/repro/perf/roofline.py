@@ -1,0 +1,112 @@
+"""Three-term roofline model from dry-run artifacts.
+
+Per (architecture × shape × mesh):
+
+    compute term    = HLO_FLOPs_total   / (chips × peak_FLOP/s)
+                    = flops_per_device  / peak_FLOP/s          (SPMD)
+    memory term     = HLO_bytes_total   / (chips × HBM_bw)
+                    = bytes_per_device  / HBM_bw
+    collective term = wire_bytes_total  / (chips × link_bw)
+                    = wire_bytes_per_device / link_bw
+
+``cost_analysis`` numbers on an SPMD executable are per-device, so the chip
+count cancels.  The *dominant* term lower-bounds step time; the roofline
+fraction we report for an optimization is ``useful_model_time / dominant``
+where ``useful_model_time = MODEL_FLOPS / (chips × peak)``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from .hlo import HloCostSummary
+from .hw import Chip, TPU_V5E
+
+__all__ = ["RooflineTerms", "roofline_from_summary", "model_flops"]
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_total: float  # 6·N·D (train) or 2·N·D (inference), all chips
+    hlo_flops_total: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        if self.hlo_flops_total <= 0:
+            return 0.0
+        return self.model_flops_total / self.hlo_flops_total
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful model compute time / achievable step time (≤ 1)."""
+        if self.bound_s <= 0:
+            return 0.0
+        chips_peak = self.chips * TPU_V5E.peak_bf16_flops
+        return (self.model_flops_total / chips_peak) / self.bound_s
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops_total": self.model_flops_total,
+            "hlo_flops_total": self.hlo_flops_total,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_from_summary(
+    summary: HloCostSummary,
+    *,
+    arch: str,
+    shape: str,
+    mesh: str,
+    chips: int,
+    model_flops_total: float,
+    chip: Chip = TPU_V5E,
+) -> RooflineTerms:
+    return RooflineTerms(
+        arch=arch,
+        shape=shape,
+        mesh=mesh,
+        chips=chips,
+        compute_s=summary.flops_per_device / chip.peak_bf16_flops,
+        memory_s=summary.hbm_bytes_per_device / chip.hbm_bw,
+        collective_s=summary.collective_wire_bytes_per_device / chip.ici_link_bw,
+        model_flops_total=model_flops_total,
+        hlo_flops_total=summary.flops_per_device * chips,
+    )
+
+
+def model_flops(n_active_params: float, tokens: float, *, train: bool) -> float:
+    """6·N·D for training, 2·N·D for inference forward (N = *active* params
+    for MoE — experts not routed to do no useful work)."""
+    return (6.0 if train else 2.0) * n_active_params * tokens

@@ -1,0 +1,6 @@
+"""Serving: KV caches, continuous batching, per-stream request stats."""
+
+from .cache_utils import cache_bytes, transplant
+from .engine import Engine, Request, ServeConfig
+
+__all__ = ["cache_bytes", "transplant", "Engine", "Request", "ServeConfig"]

@@ -1,0 +1,34 @@
+"""Cache pytree utilities shared by the serving engine and tests."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["transplant", "cache_bytes"]
+
+
+def transplant(big, small):
+    """Copy a prefill cache (prompt-length buffers) into a full-size decode
+    cache.  Leaves with equal shapes are replaced outright; leaves differing
+    in exactly one axis (the sequence axis) are written at offset 0.
+    """
+
+    def one(b: jax.Array, s: jax.Array) -> jax.Array:
+        if b.shape == s.shape:
+            return s.astype(b.dtype)
+        if b.ndim != s.ndim:
+            raise ValueError(f"cache rank mismatch: {b.shape} vs {s.shape}")
+        diff = [i for i in range(b.ndim) if b.shape[i] != s.shape[i]]
+        if len(diff) != 1:
+            raise ValueError(f"cache shape mismatch: {b.shape} vs {s.shape}")
+        start = (0,) * b.ndim
+        return jax.lax.dynamic_update_slice(b, s.astype(b.dtype), start)
+
+    return jax.tree_util.tree_map(one, big, small)
+
+
+def cache_bytes(cache) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(cache))

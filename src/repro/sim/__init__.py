@@ -1,0 +1,39 @@
+"""Discrete-event TPU timing simulator — the GPGPU-Sim analog.
+
+Hosts the paper's per-stream stat tracking at cycle granularity: concurrent
+streams of kernels share VMEM/HBM/ICI/MXU models, every access event carries
+its stream id, and the executor maintains the per-stream ("tip") and
+baseline ("clean", with the same-cycle undercount) stat views side by side.
+"""
+
+from .kernel_desc import Access, KernelDesc, LINE_SIZE, pointer_chase_trace, streaming_trace
+from .resources import Bandwidth, Compute, HW_V5E, VMEMCache
+from .executor import SimConfig, SimResult, TPUSimulator
+from .microbench import (
+    deepbench_like_workload,
+    l2_lat_expected_counts,
+    l2_lat_multistream,
+    mixed_stream_workload,
+)
+from .hlo_costs import kernels_from_compiled, kernels_from_summary
+
+__all__ = [
+    "Access",
+    "KernelDesc",
+    "LINE_SIZE",
+    "pointer_chase_trace",
+    "streaming_trace",
+    "Bandwidth",
+    "Compute",
+    "HW_V5E",
+    "VMEMCache",
+    "SimConfig",
+    "SimResult",
+    "TPUSimulator",
+    "deepbench_like_workload",
+    "l2_lat_expected_counts",
+    "l2_lat_multistream",
+    "mixed_stream_workload",
+    "kernels_from_compiled",
+    "kernels_from_summary",
+]

@@ -1,0 +1,324 @@
+"""Cycle-stepped executor: concurrent streams over shared TPU resources.
+
+This is the GPGPU-Sim analog.  It drives **three stat views in one pass**,
+which is how we reproduce the paper's three builds from a single binary:
+
+* ``tip``   — :class:`repro.core.StatTable`, per-stream (the paper's feature);
+* ``clean`` — :class:`repro.core.CleanStatTable`, aggregated *with* the
+  baseline's same-cycle lost-update undercount (§5.2);
+* serialized execution — ``SimConfig.serialize_streams=True`` reproduces the
+  paper's ``busy_streams.size() == 0`` patch to ``main.cc`` (§5.1), and
+  ``concurrent_streams=False`` models an unset ``-gpgpu_concurrent_kernel_sm``.
+
+Per the paper's §3 plumbing, every access event carries its kernel's stream
+id (``mem_fetch`` propagation), kernel launch/exit cycles land in a
+:class:`KernelTimeline` (``gpu_kernel_time``), and on kernel exit only the
+exiting kernel's stream stats are printed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, IO, List, Optional, Sequence, Tuple
+
+import io
+
+from repro.core.stats import (
+    AccessOutcome,
+    AccessType,
+    CleanStatTable,
+    StatTable,
+)
+from repro.core.stream import StreamManager, WorkItem
+from repro.core.timeline import KernelTimeline
+
+from .kernel_desc import Access, KernelDesc, LINE_SIZE
+from .resources import Bandwidth, CacheDecision, Compute, HW_V5E, VMEMCache
+
+__all__ = ["SimConfig", "TPUSimulator", "SimResult"]
+
+
+@dataclass
+class SimConfig:
+    """Simulator knobs (``gpgpusim.config`` analog)."""
+
+    concurrent_streams: bool = True  # -gpgpu_concurrent_kernel_sm
+    serialize_streams: bool = False  # the paper's main.cc serialization patch
+    line_size: int = LINE_SIZE
+    vmem_capacity: int = HW_V5E.vmem_core_bytes
+    hbm_latency: int = 100  # cycles HBM round-trip
+    vmem_hit_latency: int = 8  # cycles for a resident-line access
+    hbm_bytes_per_cycle: float = HW_V5E.hbm_bytes_per_cycle
+    ici_bytes_per_cycle: float = HW_V5E.ici_bytes_per_cycle
+    flops_per_cycle: float = HW_V5E.flops_per_cycle
+    mshr_entries: int = 2048  # DMA engines track thousands of in-flight lines
+    mshr_max_merge: int = 8
+    bw_stall_horizon: int = 4096  # HBM queue depth before issue stalls
+    max_cycles: int = 50_000_000
+    max_synth_beats: int = 4096  # beat granularity for aggregate-cost kernels
+    #: straggler injection: stream_id -> slowdown factor (>1 = slower)
+    stream_slowdown: Dict[int, float] = field(default_factory=dict)
+    verbose: bool = False
+
+
+@dataclass
+class SimResult:
+    cycles: int
+    stats: StatTable  # tip (per-stream)
+    clean: CleanStatTable  # baseline emulation (aggregated + undercount bug)
+    clean_fail: CleanStatTable
+    timeline: KernelTimeline
+    log: List[str]
+
+    def tip_aggregate(self):
+        return self.stats.aggregate()
+
+
+class _Run:
+    """In-flight kernel state (one per launched KernelDesc)."""
+
+    __slots__ = (
+        "desc",
+        "work",
+        "trace_pos",
+        "next_issue_cycle",
+        "compute_end",
+        "syn_rd",
+        "syn_wr",
+        "syn_ici",
+        "syn_lines_per_beat",
+        "syn_cursor",
+        "issue_tokens",
+    )
+
+    def __init__(self, desc: KernelDesc, work: WorkItem, launch_cycle: int, compute_end: int, max_beats: int):
+        self.desc = desc
+        self.work = work
+        self.trace_pos = 0
+        self.next_issue_cycle = launch_cycle
+        self.compute_end = compute_end
+        rd, wr, ici = desc.synthesized_lines()
+        total = rd + wr + ici
+        self.syn_lines_per_beat = max(1, (total + max_beats - 1) // max_beats)
+        self.syn_rd, self.syn_wr, self.syn_ici = rd, wr, ici
+        self.syn_cursor = desc.addr_base
+        self.issue_tokens = 0.0
+
+    def drained(self) -> bool:
+        trace_done = self.desc.trace is None or self.trace_pos >= len(self.desc.trace)
+        return trace_done and self.syn_rd == 0 and self.syn_wr == 0 and self.syn_ici == 0
+
+
+class TPUSimulator:
+    """Discrete-event simulator with per-stream stat tracking."""
+
+    def __init__(self, config: Optional[SimConfig] = None) -> None:
+        self.cfg = config or SimConfig()
+        self.streams = StreamManager()
+        self.stats = StatTable(name="Total_core_cache_stats")
+        self.clean = CleanStatTable(name="Total_core_cache_stats")
+        self.clean_fail = CleanStatTable(
+            n_outcomes=max(AccessOutcome.count(), 8), name="Cache_fail_stats"
+        )
+        self.timeline = KernelTimeline()
+        self.hbm = Bandwidth(self.cfg.hbm_bytes_per_cycle)
+        self.ici = Bandwidth(self.cfg.ici_bytes_per_cycle)
+        self.compute = Compute(self.cfg.flops_per_cycle)
+        self.cache = VMEMCache(
+            self.cfg.vmem_capacity,
+            self.cfg.line_size,
+            self.hbm,
+            hbm_latency=self.cfg.hbm_latency,
+            mshr_entries=self.cfg.mshr_entries,
+            mshr_max_merge=self.cfg.mshr_max_merge,
+            bw_stall_horizon=self.cfg.bw_stall_horizon,
+        )
+        self.log: List[str] = []
+        self._active: List[_Run] = []
+        self._cycle = 0
+
+    # -- stream/launch API (mirrors cuda<<<>>> + events) -------------------------
+    def create_stream(self, name: str = ""):
+        return self.streams.create_stream(name)
+
+    def launch(
+        self,
+        stream_id: int,
+        desc: KernelDesc,
+        wait_events: Sequence[int] = (),
+        record_events: Sequence[int] = (),
+    ) -> WorkItem:
+        return self.streams.launch(
+            stream_id, desc.name, payload=desc, wait_events=wait_events, record_events=record_events
+        )
+
+    def create_event(self):
+        return self.streams.create_event()
+
+    # -- logging -------------------------------------------------------------------
+    def _emit(self, line: str) -> None:
+        self.log.append(line)
+        if self.cfg.verbose:
+            print(line)
+
+    # -- main loop -------------------------------------------------------------------
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        serialize = cfg.serialize_streams or not cfg.concurrent_streams
+        while self.streams.pending() > 0:
+            if self._cycle >= cfg.max_cycles:
+                raise RuntimeError(f"simulation exceeded max_cycles={cfg.max_cycles}")
+            cycle = self._cycle
+            self.cache.tick(cycle)
+
+            # Launch at most one kernel per cycle (Accel-Sim launches happen on
+            # distinct cycles; this stagger is also what keeps the §5.1
+            # latency-bound benchmark free of same-cycle stat collisions).
+            cands = self.streams.launchable(serialize=serialize)
+            if cands:
+                w = cands[0]
+                desc: KernelDesc = w.payload  # type: ignore[assignment]
+                self.streams.mark_launched(w)
+                n_sharers = len(self._active) + 1
+                compute_end = cycle + self.compute.cycles_for(desc.flops, n_sharers)
+                self._active.append(_Run(desc, w, cycle, compute_end, cfg.max_synth_beats))
+                self.timeline.on_launch(w.stream_id, desc.uid, cycle, desc.name)
+                self._emit(f"launching kernel name: {desc.name} uid: {desc.uid} stream: {w.stream_id}")
+
+            # Issue memory accesses for every active kernel (uid order — the
+            # deterministic analog of GPGPU-Sim's core iteration order).
+            for run in list(self._active):
+                self._issue(run, cycle)
+
+            # Retire finished kernels.
+            for run in list(self._active):
+                if run.drained() and cycle >= run.compute_end and cycle >= run.next_issue_cycle:
+                    self._retire(run, cycle)
+
+            self._cycle += 1
+        return SimResult(
+            cycles=self._cycle,
+            stats=self.stats,
+            clean=self.clean,
+            clean_fail=self.clean_fail,
+            timeline=self.timeline,
+            log=self.log,
+        )
+
+    # -- access issue ------------------------------------------------------------------
+    def _issue(self, run: _Run, cycle: int) -> None:
+        cfg = self.cfg
+        sid = run.work.stream_id
+        if cycle < run.next_issue_cycle:
+            return
+
+        # Straggler injection: a slowed stream accrues fractional issue tokens.
+        slowdown = cfg.stream_slowdown.get(sid, 1.0)
+        run.issue_tokens += 1.0 / slowdown
+        if run.issue_tokens < 1.0:
+            return
+        run.issue_tokens -= 1.0
+
+        budget = 1 if run.desc.dependent else run.desc.issue_width
+        while budget > 0:
+            acc = self._next_access(run)
+            if acc is None:
+                return
+            access, n_lines = acc
+            if access.atype in (AccessType.ICI_SND, AccessType.ICI_RCV):
+                # Collectives bypass VMEM; they occupy ICI link bandwidth.
+                self.ici.occupy(n_lines * cfg.line_size, cycle)
+                self._count(access.atype, AccessOutcome.MISS, sid, cycle, n_lines)
+                self._advance(run, access, n_lines)
+                budget -= 1
+                continue
+
+            if run.desc.trace is not None and run.trace_pos < len(run.desc.trace):
+                # Explicit traces go through the VMEM residency model.
+                decision = self._trace_access(run, access, cycle, sid)
+                if decision is None:
+                    return  # reservation failure → retry next cycle
+                budget -= 1
+            else:
+                # Synthesized streaming beats bypass residency (.cg analog):
+                # straight HBM traffic, classified MISS.
+                is_wr = access.atype in (AccessType.GLOBAL_ACC_W, AccessType.KV_ACC_W)
+                self.hbm.occupy(n_lines * cfg.line_size, cycle)
+                self._count(access.atype, AccessOutcome.MISS, sid, cycle, n_lines)
+                self._advance(run, access, n_lines)
+                budget -= 1
+
+    def _trace_access(self, run: _Run, access: Access, cycle: int, sid: int) -> Optional[CacheDecision]:
+        cfg = self.cfg
+        last_decision: Optional[CacheDecision] = None
+        for tag in access.lines(cfg.line_size):
+            decision = self.cache.access_line(
+                tag, access.atype in (AccessType.GLOBAL_ACC_W, AccessType.KV_ACC_W), cycle, sid
+            )
+            if decision.outcome == AccessOutcome.RESERVATION_FAILURE:
+                self.stats.inc_fail_stats(access.atype, decision.fail_reason, sid)
+                self.clean_fail.inc_stats(access.atype, decision.fail_reason, cycle, sid)
+                return None
+            self._count(access.atype, decision.outcome, sid, cycle, 1)
+            last_decision = decision
+        run.trace_pos += 1
+        if run.desc.dependent and last_decision is not None:
+            if last_decision.outcome == AccessOutcome.HIT:
+                wait = cfg.vmem_hit_latency
+            else:
+                wait = max(last_decision.ready_cycle - cycle, 1)
+            # straggler injection scales the dependent-load latency too
+            slowdown = cfg.stream_slowdown.get(sid, 1.0)
+            run.next_issue_cycle = cycle + int(wait * slowdown)
+        return last_decision
+
+    def _next_access(self, run: _Run) -> Optional[Tuple[Access, int]]:
+        """The next access event and the number of lines it represents."""
+        d = run.desc
+        if d.trace is not None and run.trace_pos < len(d.trace):
+            return d.trace[run.trace_pos], 1
+        beat = run.syn_lines_per_beat
+        if run.syn_rd > 0:
+            n = min(beat, run.syn_rd)
+            return Access(AccessType.GLOBAL_ACC_R, run.syn_cursor, n * self.cfg.line_size), n
+        if run.syn_wr > 0:
+            n = min(beat, run.syn_wr)
+            return Access(AccessType.GLOBAL_ACC_W, run.syn_cursor, n * self.cfg.line_size), n
+        if run.syn_ici > 0:
+            n = min(beat, run.syn_ici)
+            return Access(AccessType.ICI_SND, run.syn_cursor, n * self.cfg.line_size), n
+        return None
+
+    def _advance(self, run: _Run, access: Access, n_lines: int) -> None:
+        if access.atype == AccessType.GLOBAL_ACC_R and run.syn_rd:
+            run.syn_rd -= n_lines
+        elif access.atype == AccessType.GLOBAL_ACC_W and run.syn_wr:
+            run.syn_wr -= n_lines
+        elif access.atype in (AccessType.ICI_SND, AccessType.ICI_RCV) and run.syn_ici:
+            run.syn_ici -= n_lines
+        run.syn_cursor += n_lines * self.cfg.line_size
+
+    def _count(self, atype: int, outcome: int, sid: int, cycle: int, n: int) -> None:
+        """One event → all three stat views (tip per-stream, tip per-window,
+        clean-with-undercount).  ``n`` covers beat-compressed events."""
+        self.stats.inc_stats(atype, outcome, sid, n)
+        self.stats.inc_stats_pw(atype, outcome, sid, n)
+        # The clean build loses the update iff a *different* stream touched
+        # the same (type, outcome) cell in the same cycle (§5.2).
+        self.clean.inc_stats(atype, outcome, cycle, sid, n)
+
+    # -- retire ------------------------------------------------------------------------
+    def _retire(self, run: _Run, cycle: int) -> None:
+        self._active.remove(run)
+        self.streams.mark_done(run.work)
+        self.timeline.on_done(run.work.stream_id, run.desc.uid, cycle)
+        sid = run.work.stream_id
+        # Paper §3.1: print only the exiting kernel's stream stats.
+        buf = io.StringIO()
+        buf.write(f"kernel '{run.desc.name}' uid {run.desc.uid} finished on stream {sid} @ cycle {cycle}\n")
+        self.timeline.print_kernel(buf, sid, run.desc.uid)
+        self.stats.print_stats(buf, sid, "Total_core_cache_stats")
+        self.stats.print_fail_stats(buf, sid, "Total_core_cache_fail_stats")
+        self._emit(buf.getvalue().rstrip("\n"))
+        # End of the kernel's stat window (m_stats_pw semantics).
+        self.stats.clear_pw()

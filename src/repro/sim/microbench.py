@@ -1,0 +1,218 @@
+"""The paper's validation microbenchmarks as simulator workloads (§5).
+
+* :func:`l2_lat_multistream` — §5.1: one pointer-chasing kernel replicated on
+  N streams, all walking the *same* array (the CUDA source passes the same
+  ``posArray_g`` to every launch).  Deterministic access counts; cross-stream
+  in-flight merges turn would-be HITs into MSHR_HITs under concurrency.
+* :func:`mixed_stream_workload` — §5.2: ``saxpy``/``scale``/``add`` kernels
+  with the dependency pattern of ``benchmark_1_stream.cu`` /
+  ``benchmark_3_stream.cu`` (kernel 2 depends on kernel 1; kernel 3
+  independent on its own stream; kernel 4 depends on kernel 2).
+* :func:`deepbench_like_workload` — §5.3: large GEMM kernels with DeepBench
+  ``inference_half_35_1500_2560`` shapes, optionally replaced by descriptors
+  derived from real compiled HLO (see :mod:`repro.sim.hlo_costs`).
+
+Expected-count helpers return closed-form access counts so tests can assert
+exact per-stream numbers, as the paper does ("The total read and write access
+counts for each of the four streams are consistent and exactly met our
+expected counts").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.stats import AccessType
+
+from .executor import SimConfig, SimResult, TPUSimulator
+from .kernel_desc import (
+    Access,
+    KernelDesc,
+    LINE_SIZE,
+    pointer_chase_trace,
+    streaming_trace,
+)
+
+__all__ = [
+    "l2_lat_multistream",
+    "l2_lat_expected_counts",
+    "mixed_stream_workload",
+    "deepbench_like_workload",
+]
+
+#: Float32 element size used by the saxpy-family kernels.
+F32 = 4
+
+
+# --------------------------------------------------------------------------- §5.1
+def l2_lat_multistream(
+    n_streams: int = 4,
+    n_loads: int = 64,
+    *,
+    serialize: bool = False,
+    concurrent: bool = True,
+    config: Optional[SimConfig] = None,
+) -> SimResult:
+    """``l2_lat.cu`` modified for N concurrent streams (paper §5.1).
+
+    Every stream runs an identical dependent-load (pointer-chase) kernel over
+    the **same** array, exactly like the paper's four ``l2_lat<<<1,1,0,
+    stream_k>>>(..., posArray_g, ...)`` launches.
+    """
+    cfg = config or SimConfig()
+    cfg.serialize_streams = serialize
+    cfg.concurrent_streams = concurrent
+    sim = TPUSimulator(cfg)
+    base = 1 << 20  # posArray_g
+    streams = [sim.create_stream(f"stream_{i+1}") for i in range(n_streams)]
+    for s in streams:
+        sim.launch(s.stream_id, KernelDesc(name="l2_lat", trace=pointer_chase_trace(base, n_loads), dependent=True))
+    return sim.run()
+
+
+def l2_lat_expected_counts(n_streams: int, n_loads: int, line_size: int = LINE_SIZE) -> Dict[str, int]:
+    """Closed-form expected counts for :func:`l2_lat_multistream`.
+
+    With 8-byte sequential loads, the walk touches ``ceil(8*n_loads/line)``
+    distinct lines.  Under concurrency, the first stream to touch each line
+    MISSes; the remaining ``n_streams-1`` streams reach it while the fetch is
+    still in flight (HBM latency ≫ launch stagger) → MSHR_HIT; every other
+    load is a HIT.  Totals (= what the *clean* build should report, and what
+    the tip build's per-stream counts must sum to):
+    """
+    n_lines = (8 * n_loads + line_size - 1) // line_size
+    total = n_streams * n_loads
+    return {
+        "MISS": n_lines,
+        "MSHR_HIT": (n_streams - 1) * n_lines,
+        "HIT": total - n_lines - (n_streams - 1) * n_lines,
+        "TOTAL": total,
+    }
+
+
+# --------------------------------------------------------------------------- §5.2
+@dataclass(frozen=True)
+class _MixedShapes:
+    """Problem size of benchmark_{1,3}_stream.cu: N = 1<<18 floats."""
+
+    n: int = 1 << 18
+
+    @property
+    def vec_bytes(self) -> int:
+        return self.n * F32
+
+
+def _saxpy_desc(name: str, shapes: _MixedShapes, x_base: int, y_base: int) -> KernelDesc:
+    # y[i] = a*x[i] + y[i]  → read x, read y, write y; 2 flops/elem.
+    trace = (
+        streaming_trace(x_base, shapes.vec_bytes, AccessType.GLOBAL_ACC_R)
+        + streaming_trace(y_base, shapes.vec_bytes, AccessType.GLOBAL_ACC_R)
+        + streaming_trace(y_base, shapes.vec_bytes, AccessType.GLOBAL_ACC_W)
+    )
+    return KernelDesc(name=name, trace=trace, flops=2.0 * shapes.n, issue_width=4)
+
+
+def _scale_desc(name: str, shapes: _MixedShapes, a_base: int) -> KernelDesc:
+    # a[i] = s*a[i] → read a, write a; 1 flop/elem.
+    trace = streaming_trace(a_base, shapes.vec_bytes, AccessType.GLOBAL_ACC_R) + streaming_trace(
+        a_base, shapes.vec_bytes, AccessType.GLOBAL_ACC_W
+    )
+    return KernelDesc(name=name, trace=trace, flops=1.0 * shapes.n, issue_width=4)
+
+
+def _add_desc(name: str, shapes: _MixedShapes, a_base: int, b_base: int) -> KernelDesc:
+    # b[i] = (i<n/2) ? a[i]+b[i] : 2*b[i] → reads a (half), b; writes b.
+    trace = (
+        streaming_trace(a_base, shapes.vec_bytes // 2, AccessType.GLOBAL_ACC_R)
+        + streaming_trace(b_base, shapes.vec_bytes, AccessType.GLOBAL_ACC_R)
+        + streaming_trace(b_base, shapes.vec_bytes, AccessType.GLOBAL_ACC_W)
+    )
+    return KernelDesc(name=name, trace=trace, flops=1.0 * shapes.n, issue_width=4)
+
+
+def mixed_stream_workload(
+    n_streams: int = 3,
+    *,
+    n: int = 1 << 18,
+    serialize: bool = False,
+    config: Optional[SimConfig] = None,
+) -> SimResult:
+    """benchmark_1_stream.cu (n_streams=1 extra stream) / benchmark_3_stream.cu
+    (n_streams=3) from §5.2.
+
+    Dependency structure from the CUDA source:
+      * kernel 1 (saxpy, default stream)
+      * kernel 2 (scale, default stream) — depends on kernel 1 (stream FIFO)
+      * kernel 3 (saxpy) — independent, on ``stream_1`` (or spread over the
+        extra streams when ``n_streams > 1``)
+      * kernel 4 (add, default stream) — depends on kernel 2 (stream FIFO)
+    """
+    cfg = config or SimConfig()
+    cfg.serialize_streams = serialize
+    sim = TPUSimulator(cfg)
+    shapes = _MixedShapes(n)
+    mb = shapes.vec_bytes + (1 << 12)  # distinct arrays, page-aligned-ish
+    d_x, d_y, d_z, d_a = (1 * mb, 2 * mb, 3 * mb, 4 * mb)
+
+    default = 0  # default stream
+    extra = [sim.create_stream(f"stream_{i+1}") for i in range(max(1, n_streams))]
+
+    # Kernel 1 & 2 & 4 on the default stream: FIFO gives k2←k1 and k4←k2.
+    sim.launch(default, _saxpy_desc("saxpy_k1", shapes, d_x, d_y))
+    sim.launch(default, _scale_desc("scale_k2", shapes, d_y))
+    # Kernel 3: independent saxpy on the side stream(s).
+    for i, s in enumerate(extra):
+        sim.launch(s.stream_id, _saxpy_desc(f"saxpy_k3_{i}", shapes, d_x, d_z + i * mb))
+    sim.launch(default, _add_desc("add_k4", shapes, d_y, d_a))
+    return sim.run()
+
+
+# --------------------------------------------------------------------------- §5.3
+def deepbench_like_workload(
+    kernels: Optional[Sequence[KernelDesc]] = None,
+    n_streams: int = 2,
+    repeats: int = 4,
+    *,
+    serialize: bool = False,
+    config: Optional[SimConfig] = None,
+) -> SimResult:
+    """DeepBench ``inference_half_35_1500_2560`` analog (§5.3).
+
+    Default kernels are half-precision GEMMs with DeepBench's inference
+    shape (m=35, n=1500... the trace's K/N/batch family 35×1500×2560) —
+    or pass descriptors derived from real compiled HLO
+    (:func:`repro.sim.hlo_costs.kernels_from_compiled`).
+    """
+    cfg = config or SimConfig()
+    cfg.serialize_streams = serialize
+    sim = TPUSimulator(cfg)
+    if kernels is None:
+        m, n, k = 35, 1500, 2560
+        bytes_a, bytes_b, bytes_c = 2 * m * k, 2 * k * n, 2 * m * n
+        kernels = [
+            KernelDesc(
+                name=f"gemm_{m}x{n}x{k}",
+                flops=2.0 * m * n * k,
+                hbm_rd_bytes=bytes_a + bytes_b,
+                hbm_wr_bytes=bytes_c,
+                addr_base=(i + 1) << 26,
+            )
+            for i in range(repeats)
+        ]
+    streams = [sim.create_stream(f"req_{i}") for i in range(n_streams)]
+    for i, kd in enumerate(kernels):
+        # Round-robin kernels over request streams, fresh uid per launch.
+        kd_i = KernelDesc(
+            name=kd.name,
+            flops=kd.flops,
+            trace=list(kd.trace) if kd.trace else None,
+            hbm_rd_bytes=kd.hbm_rd_bytes,
+            hbm_wr_bytes=kd.hbm_wr_bytes,
+            ici_bytes=kd.ici_bytes,
+            addr_base=kd.addr_base or ((i + 1) << 26),
+            dependent=kd.dependent,
+            issue_width=kd.issue_width,
+        )
+        sim.launch(streams[i % n_streams].stream_id, kd_i)
+    return sim.run()

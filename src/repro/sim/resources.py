@@ -1,0 +1,215 @@
+"""Shared-resource models for the TPU timing simulator.
+
+GPGPU-Sim models SMs, an L2, and DRAM channels; the TPU analog we model is
+
+* :class:`VMEMCache` — the HBM→VMEM staging buffer treated as a cache with an
+  MSHR-like in-flight merge table.  TPU VMEM is software-managed, but DMA
+  engines do merge redundant in-flight HBM fetches, which is what MSHR_HIT
+  (``HIT_RESERVED``) captures; residency-HIT models intra-window reuse.
+* :class:`Bandwidth` — token-bucket bytes/cycle for HBM and ICI links.
+* :class:`Compute` — MXU FLOPs/cycle.
+
+The classification outcomes intentionally mirror Accel-Sim's
+``cache_request_status`` so the paper's stat tables translate one-to-one.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.stats import AccessOutcome, FailOutcome
+
+__all__ = ["VMEMCache", "Bandwidth", "Compute", "CacheDecision", "HW_V5E"]
+
+
+@dataclass(frozen=True)
+class HWConstants:
+    """TPU v5e (the target part) — used by both the simulator and roofline."""
+
+    peak_bf16_flops: float = 197e12  # FLOP/s per chip
+    hbm_bw: float = 819e9  # B/s per chip
+    ici_bw_per_link: float = 50e9  # B/s per link (~
+
+    clock_hz: float = 0.94e9
+    vmem_bytes: int = 128 * 2**20  # total on-chip vector memory
+    vmem_core_bytes: int = 16 * 2**20  # per-core staging budget we model
+
+    @property
+    def flops_per_cycle(self) -> float:
+        return self.peak_bf16_flops / self.clock_hz
+
+    @property
+    def hbm_bytes_per_cycle(self) -> float:
+        return self.hbm_bw / self.clock_hz
+
+    @property
+    def ici_bytes_per_cycle(self) -> float:
+        return self.ici_bw_per_link / self.clock_hz
+
+
+HW_V5E = HWConstants()
+
+
+@dataclass(frozen=True)
+class CacheDecision:
+    outcome: AccessOutcome
+    fail_reason: Optional[FailOutcome] = None
+    ready_cycle: int = 0  # cycle at which the line becomes resident (MISS/HIT_RESERVED)
+
+
+class Bandwidth:
+    """Bytes/cycle token bucket with a rolling next-free-cycle pointer."""
+
+    def __init__(self, bytes_per_cycle: float) -> None:
+        self.bytes_per_cycle = float(bytes_per_cycle)
+        self.next_free_cycle = 0.0
+        self.total_bytes = 0
+
+    def occupy(self, n_bytes: int, cycle: int) -> int:
+        """Schedule a transfer; returns the cycle it completes."""
+        start = max(float(cycle), self.next_free_cycle)
+        dur = n_bytes / self.bytes_per_cycle
+        self.next_free_cycle = start + dur
+        self.total_bytes += n_bytes
+        return int(self.next_free_cycle) + 1
+
+    def saturated(self, cycle: int, horizon: int) -> bool:
+        """True if the queue is already ``horizon`` cycles deep."""
+        return self.next_free_cycle > cycle + horizon
+
+
+class Compute:
+    """MXU occupancy: per-kernel FLOP budgets drained at flops/cycle,
+    shared fairly among concurrently resident kernels."""
+
+    def __init__(self, flops_per_cycle: float) -> None:
+        self.flops_per_cycle = float(flops_per_cycle)
+
+    def cycles_for(self, flops: float, n_sharers: int = 1) -> int:
+        if flops <= 0:
+            return 0
+        eff = self.flops_per_cycle / max(1, n_sharers)
+        return max(1, int(flops / eff))
+
+
+class _Line:
+    __slots__ = ("tag", "dirty", "last_use")
+
+    def __init__(self, tag: int, dirty: bool, last_use: int) -> None:
+        self.tag = tag
+        self.dirty = dirty
+        self.last_use = last_use
+
+
+class VMEMCache:
+    """Fully-associative LRU line cache with an MSHR merge table.
+
+    Classification per line (Accel-Sim semantics):
+
+    * resident                      → HIT
+    * in MSHR (fetch in flight)     → HIT_RESERVED  (printed MSHR_HIT); the
+      requesting stream is merged onto the entry — this is how concurrent
+      streams convert each other's HITs into MSHR_HITs (paper §5.1).
+    * MSHR full                     → RESERVATION_FAILURE / MSHR_ENTRY_FAIL
+    * merge list full               → RESERVATION_FAILURE / MSHR_MERGE_FAIL
+    * HBM queue too deep            → RESERVATION_FAILURE / BANDWIDTH_FAIL
+    * otherwise                     → MISS, fetch scheduled on HBM
+    """
+
+    def __init__(
+        self,
+        capacity_bytes: int,
+        line_size: int,
+        hbm: Bandwidth,
+        hbm_latency: int = 100,
+        mshr_entries: int = 2048,
+        mshr_max_merge: int = 8,
+        bw_stall_horizon: int = 4096,
+    ) -> None:
+        self.line_size = int(line_size)
+        self.n_lines = max(1, int(capacity_bytes // line_size))
+        self.hbm = hbm
+        self.hbm_latency = int(hbm_latency)
+        self.mshr_entries = int(mshr_entries)
+        self.mshr_max_merge = int(mshr_max_merge)
+        self.bw_stall_horizon = int(bw_stall_horizon)
+        self._lines: Dict[int, _Line] = {}  # tag -> line
+        #: tag -> (ready_cycle, merge list in arrival order).  Responses drain
+        #: to merged consumers on consecutive cycles (position in the list),
+        #: which also desynchronizes previously-merged streams — matching the
+        #: paper's §5.1 observation that clean == Σ tip for l2_lat (no
+        #: same-cycle stat collisions once streams are staggered).
+        self._mshr: Dict[int, Tuple[int, List[int]]] = {}
+        self._writebacks = 0
+
+    # -- per-cycle maintenance ---------------------------------------------------
+    def tick(self, cycle: int) -> None:
+        """Promote completed fetches to residency (called once per cycle)."""
+        ready = [tag for tag, (rc, _) in self._mshr.items() if rc <= cycle]
+        for tag in ready:
+            del self._mshr[tag]
+            self._install(tag, dirty=False, cycle=cycle)
+
+    def _install(self, tag: int, dirty: bool, cycle: int) -> None:
+        if tag in self._lines:
+            line = self._lines[tag]
+            line.dirty = line.dirty or dirty
+            line.last_use = cycle
+            return
+        if len(self._lines) >= self.n_lines:
+            # LRU evict; dirty lines cost a writeback (VMEM_WRBK row).
+            victim = min(self._lines.values(), key=lambda l: l.last_use)
+            if victim.dirty:
+                self._writebacks += 1
+                self.hbm.occupy(self.line_size, cycle)
+            del self._lines[victim.tag]
+        self._lines[tag] = _Line(tag, dirty, cycle)
+
+    # -- the access path -----------------------------------------------------------
+    def access_line(self, tag: int, is_write: bool, cycle: int, stream_id: int) -> CacheDecision:
+        line = self._lines.get(tag)
+        if line is not None:
+            line.last_use = cycle
+            if is_write:
+                line.dirty = True
+            return CacheDecision(AccessOutcome.HIT)
+
+        inflight = self._mshr.get(tag)
+        if inflight is not None:
+            ready_cycle, streams = inflight
+            if stream_id in streams:
+                position = streams.index(stream_id)
+            else:
+                if len(streams) >= self.mshr_max_merge:
+                    return CacheDecision(
+                        AccessOutcome.RESERVATION_FAILURE, FailOutcome.MSHR_MERGE_FAIL
+                    )
+                streams.append(stream_id)
+                position = len(streams) - 1
+            return CacheDecision(AccessOutcome.HIT_RESERVED, ready_cycle=ready_cycle + position)
+
+        if len(self._mshr) >= self.mshr_entries:
+            return CacheDecision(AccessOutcome.RESERVATION_FAILURE, FailOutcome.MSHR_ENTRY_FAIL)
+        if self.hbm.saturated(cycle, self.bw_stall_horizon):
+            return CacheDecision(AccessOutcome.RESERVATION_FAILURE, FailOutcome.BANDWIDTH_FAIL)
+
+        done = self.hbm.occupy(self.line_size, cycle)
+        ready_cycle = max(cycle + self.hbm_latency, done)
+        self._mshr[tag] = (ready_cycle, [stream_id])  # write-allocate either way
+        return CacheDecision(AccessOutcome.MISS, ready_cycle=ready_cycle)
+
+    # -- introspection ----------------------------------------------------------
+    @property
+    def writebacks(self) -> int:
+        return self._writebacks
+
+    def resident(self, tag: int) -> bool:
+        return tag in self._lines
+
+    def in_flight(self, tag: int) -> bool:
+        return tag in self._mshr
+
+    def flush(self) -> None:
+        self._lines.clear()
+        self._mshr.clear()

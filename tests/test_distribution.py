@@ -1,0 +1,172 @@
+"""Sharding-plan + HLO-introspection tests (mesh-free and tiny-mesh)."""
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, get_smoke_config
+from repro.models.params import DEFAULT_RULES, ParamDef, logical_to_pspec
+from repro.perf.hlo import CollectiveOp, parse_collectives, _shape_bytes
+from repro.perf.roofline import roofline_from_summary
+from repro.perf.hlo import HloCostSummary
+
+
+class TestLogicalToPspec:
+    SIZES = {"data": 16, "model": 16, "pod": 2}
+
+    def test_divisible_dims_shard(self):
+        spec = logical_to_pspec(("embed", "heads", None), (4096, 64, 128), DEFAULT_RULES, self.SIZES)
+        assert spec == P("data", "model")
+
+    def test_non_divisible_falls_back(self):
+        # phi3: 40 heads % 16 != 0 → replicated head dim, embed still sharded
+        spec = logical_to_pspec(("embed", "heads", None), (5120, 40, 128), DEFAULT_RULES, self.SIZES)
+        assert spec == P("data")
+
+    def test_axis_used_once(self):
+        # two logical dims both wanting "model": first wins
+        rules = dict(DEFAULT_RULES, vocab="model", mlp="model")
+        spec = logical_to_pspec(("vocab", "mlp"), (1600, 1600), rules, self.SIZES)
+        assert spec == P("model")
+
+    def test_multi_axis_batch(self):
+        spec = logical_to_pspec(("batch", None), (256, 10), DEFAULT_RULES, self.SIZES)
+        assert spec == P(("pod", "data"))
+
+    def test_batch_partial_when_pod_missing(self):
+        spec = logical_to_pspec(("batch", None), (256, 10), DEFAULT_RULES, {"data": 16, "model": 16})
+        assert spec == P("data")
+
+
+def _need_devices(n: int):
+    import jax
+
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} devices (covered by the subprocess dry-run test)")
+
+
+class TestShardingPlan:
+    def test_plan_covers_all_params(self):
+        import jax
+
+        _need_devices(4)
+        from repro.launch.mesh import make_tiny_mesh
+        from repro.launch.shardings import make_plan
+        from repro.models import model_defs
+
+        cfg = get_smoke_config("qwen2-72b")
+        mesh = make_tiny_mesh()
+        plan = make_plan(cfg, SHAPES["train_4k"], mesh)
+        defs = model_defs(cfg)
+        n_defs = len(jax.tree_util.tree_leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef)))
+        n_specs = len(jax.tree_util.tree_leaves(plan.param_specs, is_leaf=lambda x: isinstance(x, P)))
+        assert n_defs == n_specs
+
+    def test_long_context_switches_to_sequence_parallel(self):
+        import jax
+
+        _need_devices(4)
+        from repro.launch.mesh import make_tiny_mesh
+        from repro.launch.shardings import make_plan
+        from repro.models import init_cache
+
+        cfg = get_smoke_config("jamba-1.5-large-398b")
+        mesh = make_tiny_mesh()
+        plan = make_plan(cfg, SHAPES["long_500k"], mesh)
+        assert plan.long_context
+        cache = jax.eval_shape(lambda: init_cache(cfg, 1, 64))
+        specs = plan.cache_specs_fn(cache)
+        flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+        kv = [s for p, s in flat if str(p[-1]).find("'k'") >= 0 or str(p[-1]).find("'v'") >= 0]
+        assert any("data" in str(s) for s in kv)  # cache seq rides "data"
+
+    def test_decode_batch_sharded_normally(self):
+        import jax
+
+        _need_devices(4)
+        from repro.launch.mesh import make_tiny_mesh
+        from repro.launch.shardings import make_plan
+
+        cfg = get_smoke_config("deepseek-7b")
+        plan = make_plan(cfg, SHAPES["decode_32k"], make_tiny_mesh())
+        assert not plan.long_context
+
+
+class TestHloParsing:
+    SAMPLE = """
+  %all-reduce.2 = f32[8,512]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[2,4]<=[8], use_global_device_ids=true, to_apply=%add
+  %ag = bf16[16,1024]{1,0} all-gather(%p), channel_id=2, replica_groups=[4,2]<=[8], dimensions={0}
+  %rs = f32[4,128]{1,0} reduce-scatter(%x), channel_id=3, replica_groups=[2,4]<=[8], dimensions={0}, to_apply=%add
+  %cp = u32[2]{0} collective-permute(%ids), channel_id=4, source_target_pairs={{0,1},{1,0}}
+  %a2a = bf16[32,64]{1,0} all-to-all(%y), channel_id=5, replica_groups=[1,8]<=[8], dimensions={1}
+  %not_a_collective = f32[2,2]{1,0} add(%a, %b)
+"""
+
+    def test_parse_kinds_and_sizes(self):
+        ops = parse_collectives(self.SAMPLE)
+        kinds = sorted(o.kind for o in ops)
+        assert kinds == ["all-gather", "all-reduce", "all-to-all", "collective-permute", "reduce-scatter"]
+        ar = next(o for o in ops if o.kind == "all-reduce")
+        assert ar.result_bytes == 8 * 512 * 4
+        assert ar.group_size == 4
+
+    def test_wire_bytes_formulas(self):
+        ar = CollectiveOp("all-reduce", 1024.0, 4)
+        assert ar.wire_bytes == pytest.approx(2 * 1024 * 3 / 4)
+        ag = CollectiveOp("all-gather", 1024.0, 4)
+        assert ag.wire_bytes == pytest.approx(1024 * 3 / 4)
+        cp = CollectiveOp("collective-permute", 1024.0, 1)
+        assert cp.wire_bytes == 1024
+
+    def test_shape_bytes_tuple_and_dtypes(self):
+        assert _shape_bytes("bf16[4,8]") == 64
+        assert _shape_bytes("(f32[2,2], s8[16])") == 32
+
+    def test_real_lowered_module(self):
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding
+
+        _need_devices(4)
+        from repro.launch.mesh import make_tiny_mesh
+
+        mesh = make_tiny_mesh()
+        x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+        w = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+
+        def f(x, w):
+            return (x @ w).sum()
+
+        with mesh:
+            compiled = (
+                jax.jit(
+                    f,
+                    in_shardings=(
+                        NamedSharding(mesh, P("data", "model")),
+                        NamedSharding(mesh, P("model", None)),
+                    ),
+                )
+                .lower(x, w)
+                .compile()
+            )
+        ops = parse_collectives(compiled.as_text())
+        assert any(o.kind.startswith("all-reduce") for o in ops)
+
+
+class TestRooflineMath:
+    def test_terms_and_dominant(self):
+        s = HloCostSummary(
+            flops_per_device=197e12,       # exactly one second of compute
+            hbm_bytes_per_device=819e9 / 2, # half a second of HBM
+            collective_wire_bytes_per_device=50e9 * 2,  # two seconds of ICI
+        )
+        t = roofline_from_summary(
+            s, arch="a", shape="s", mesh="m", chips=256, model_flops_total=197e12 * 128
+        )
+        assert t.compute_s == pytest.approx(1.0)
+        assert t.memory_s == pytest.approx(0.5)
+        assert t.collective_s == pytest.approx(2.0)
+        assert t.dominant == "collective"
+        assert t.useful_flops_ratio == pytest.approx(0.5)
+        # useful time = (197e12*128)/(256*197e12) = 0.5s; bound = 2s → 0.25
+        assert t.roofline_fraction == pytest.approx(0.25)

@@ -1,0 +1,81 @@
+"""MoE dispatch correctness: sparse sort-based path vs dense reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import MoEConfig, get_smoke_config
+from repro.models.moe import capacity, moe_apply, moe_apply_dense, moe_defs, router_topk
+from repro.models.params import init_params
+
+KEY = jax.random.PRNGKey(3)
+
+
+def setup(n_experts=8, top_k=2, cf=4.0, d_model=64, e_ff=32, n_shared=0):
+    cfg = get_smoke_config("deepseek-7b")
+    from dataclasses import replace
+
+    cfg = replace(cfg, d_model=d_model, hidden_act="silu")
+    moe = MoEConfig(
+        n_experts=n_experts, top_k=top_k, expert_d_ff=e_ff,
+        n_shared=n_shared, shared_d_ff=e_ff, capacity_factor=cf,
+    )
+    params = init_params(moe_defs(cfg, moe), KEY, jnp.float32)
+    return cfg, moe, params
+
+
+class TestMoE:
+    def test_sparse_equals_dense_with_ample_capacity(self):
+        cfg, moe, params = setup(cf=8.0)
+        x = jax.random.normal(KEY, (2, 16, cfg.d_model)) * 0.5
+        y_sparse, aux_s = moe_apply(params, x, cfg, moe)
+        y_dense, aux_d = moe_apply_dense(params, x, cfg, moe)
+        np.testing.assert_allclose(np.asarray(y_sparse), np.asarray(y_dense), atol=1e-4, rtol=1e-3)
+        assert float(aux_s) == pytest.approx(float(aux_d))
+
+    def test_shared_expert_path(self):
+        cfg, moe, params = setup(cf=8.0, n_shared=2)
+        x = jax.random.normal(KEY, (1, 8, cfg.d_model)) * 0.5
+        y_sparse, _ = moe_apply(params, x, cfg, moe)
+        y_dense, _ = moe_apply_dense(params, x, cfg, moe)
+        np.testing.assert_allclose(np.asarray(y_sparse), np.asarray(y_dense), atol=1e-4, rtol=1e-3)
+
+    def test_capacity_drops_are_bounded(self):
+        """With tiny capacity, dropped tokens fall back to (shared-path only)
+        output — never NaN, never amplified."""
+        cfg, moe, params = setup(cf=0.25)
+        x = jax.random.normal(KEY, (2, 32, cfg.d_model))
+        y, _ = moe_apply(params, x, cfg, moe)
+        assert bool(jnp.isfinite(y).all())
+        # some tokens must differ from the ample-capacity result (drops happened)
+        cfg2, moe2, _ = setup(cf=8.0)
+        y_full, _ = moe_apply(params, x, cfg2, moe2)
+        assert not np.allclose(np.asarray(y), np.asarray(y_full), atol=1e-6)
+
+    def test_router_topk_weights_normalized(self):
+        cfg, moe, params = setup()
+        x = jax.random.normal(KEY, (4, cfg.d_model))
+        w, idx, aux = router_topk(params, x, moe)
+        assert w.shape == (4, moe.top_k)
+        np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, atol=1e-5)
+        assert int(idx.max()) < moe.n_experts
+        assert float(aux) >= 1.0 - 1e-3  # Switch aux loss lower bound is 1 at balance
+
+    def test_capacity_formula(self):
+        moe = MoEConfig(n_experts=8, top_k=2, expert_d_ff=1, capacity_factor=1.25)
+        c = capacity(1024, moe)
+        assert c >= 1024 * 2 / 8 * 1.25
+        assert c % 8 == 0
+
+    def test_grad_flows_through_dispatch(self):
+        cfg, moe, params = setup(cf=8.0)
+        x = jax.random.normal(KEY, (1, 8, cfg.d_model)) * 0.5
+
+        def loss(p):
+            y, aux = moe_apply(p, x, cfg, moe)
+            return jnp.sum(y**2) + 0.01 * aux
+
+        g = jax.grad(loss)(params)
+        gn = sum(float(jnp.abs(l).sum()) for l in jax.tree_util.tree_leaves(g))
+        assert np.isfinite(gn) and gn > 0

@@ -1,0 +1,71 @@
+"""Pipeline parallelism (GPipe over shard_map+ppermute) vs sequential ref."""
+
+import os
+import subprocess
+import sys
+
+ENV = {
+    "PYTHONPATH": "src",
+    "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+    "HOME": os.environ.get("HOME", "/root"),
+    "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+}
+
+CODE = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.train.pipeline import pipeline_forward, split_stages
+
+mesh = jax.make_mesh((4, 2), ("stage", "data"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+L, D, M, MB = 8, 16, 6, 4
+key = jax.random.PRNGKey(0)
+W = jax.random.normal(key, (L, D, D)) * (D ** -0.5)
+b = jax.random.normal(jax.random.fold_in(key, 1), (L, D)) * 0.1
+params = {"w": W, "b": b}
+
+def layer_fn(lp, x):
+    return jnp.tanh(x @ lp["w"] + lp["b"])
+
+xs = jax.random.normal(jax.random.fold_in(key, 2), (M, MB, D))
+
+# sequential reference
+def seq(x):
+    for i in range(L):
+        x = layer_fn({"w": W[i], "b": b[i]}, x)
+    return x
+ref = jax.vmap(seq)(xs)
+
+stage_params = split_stages(params, 4)
+with mesh:
+    out = jax.jit(
+        lambda p, x: pipeline_forward(p, x, layer_fn, mesh, "stage")
+    )(stage_params, xs)
+
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+# gradients flow through the pipeline (ppermute is differentiable)
+def loss(p, x):
+    return jnp.sum(pipeline_forward(p, x, layer_fn, mesh, "stage") ** 2)
+with mesh:
+    g = jax.jit(jax.grad(loss))(stage_params, xs)
+gn = sum(float(jnp.abs(l).sum()) for l in jax.tree_util.tree_leaves(g))
+assert np.isfinite(gn) and gn > 0
+
+# the lowered module really uses collective-permute
+with mesh:
+    txt = jax.jit(lambda p, x: pipeline_forward(p, x, layer_fn, mesh, "stage")).lower(
+        stage_params, xs).compile().as_text()
+assert "collective-permute" in txt
+print("PIPELINE_OK")
+"""
+
+
+def test_gpipe_matches_sequential():
+    proc = subprocess.run(
+        [sys.executable, "-c", CODE],
+        capture_output=True, text=True, timeout=600, env=ENV,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "PIPELINE_OK" in proc.stdout

@@ -1,0 +1,152 @@
+"""Simulator validation — the paper's §5 experiments as tests."""
+
+import numpy as np
+import pytest
+
+from repro.core.stats import AccessOutcome, AccessType
+from repro.sim import (
+    KernelDesc,
+    SimConfig,
+    TPUSimulator,
+    l2_lat_expected_counts,
+    l2_lat_multistream,
+    mixed_stream_workload,
+    deepbench_like_workload,
+    pointer_chase_trace,
+)
+
+R = AccessType.GLOBAL_ACC_R
+HIT, MSHR, MISS = AccessOutcome.HIT, AccessOutcome.HIT_RESERVED, AccessOutcome.MISS
+
+
+class TestL2Lat:
+    """§5.1 — deterministic per-stream counts."""
+
+    @pytest.mark.parametrize("n_streams,n_loads", [(4, 64), (2, 256), (8, 128)])
+    def test_exact_counts(self, n_streams, n_loads):
+        res = l2_lat_multistream(n_streams, n_loads)
+        exp = l2_lat_expected_counts(n_streams, n_loads)
+        agg = res.stats.aggregate()
+        assert int(agg[R, MISS]) == exp["MISS"]
+        assert int(agg[R, MSHR]) == exp["MSHR_HIT"]
+        assert int(agg[R, HIT]) == exp["HIT"]
+        # each stream observed exactly n_loads accesses
+        for sid in res.stats.streams():
+            assert res.stats.stream_matrix(sid)[R].sum() == n_loads
+
+    def test_clean_equals_sum_tip(self):
+        """The paper's central §5.1 equality."""
+        res = l2_lat_multistream(4, 64)
+        agg = res.stats.aggregate()
+        for o in (HIT, MSHR, MISS):
+            assert res.clean.get(R, o) == int(agg[R, o])
+        assert res.clean.lost_updates == 0
+
+    def test_serialized_converts_mshr_to_hits(self):
+        conc = l2_lat_multistream(4, 64)
+        ser = l2_lat_multistream(4, 64, serialize=True)
+        ca, sa = conc.stats.aggregate(), ser.stats.aggregate()
+        assert int(sa[R, MSHR]) == 0
+        assert int(sa[R, HIT]) > int(ca[R, HIT])
+        # total accesses identical across modes
+        assert sa[R].sum() == ca[R].sum()
+
+    def test_serialized_no_overlap(self):
+        ser = l2_lat_multistream(3, 64, serialize=True)
+        sids = ser.stats.streams()
+        assert ser.timeline.overlap_cycles(sids[0], sids[1]) == 0
+
+    def test_concurrent_kernel_flag(self):
+        """-gpgpu_concurrent_kernel_sm unset behaves like serialization."""
+        res = l2_lat_multistream(4, 64, concurrent=False)
+        assert int(res.stats.aggregate()[R, MSHR]) == 0
+
+
+class TestMixed:
+    """§5.2 — clean undercount under concurrency."""
+
+    def test_sum_tip_geq_clean_and_undercount(self):
+        res = mixed_stream_workload(n_streams=3, n=1 << 14)
+        agg = res.stats.aggregate().astype(np.int64)
+        clean = res.clean.matrix().astype(np.int64)
+        assert np.all(agg >= clean)
+        assert res.clean.lost_updates > 0
+        assert int(agg.sum()) == int(clean.sum()) + res.clean.lost_updates
+
+    def test_stream_fifo_dependencies(self):
+        res = mixed_stream_workload(n_streams=1, n=1 << 12)
+        ivs = {name: (s, e) for _, _, s, e, name in res.timeline.intervals()}
+        assert ivs["scale_k2"][0] >= ivs["saxpy_k1"][1]
+        assert ivs["add_k4"][0] >= ivs["scale_k2"][1]
+
+    def test_per_stream_totals_mode_invariant(self):
+        """Same workload, concurrent vs serialized: per-stream access totals
+        must be identical (only HIT↔MSHR classification may shift)."""
+        a = mixed_stream_workload(n_streams=2, n=1 << 12)
+        b = mixed_stream_workload(n_streams=2, n=1 << 12, serialize=True)
+        for sid in a.stats.streams():
+            assert a.stats.stream_matrix(sid).sum() == b.stats.stream_matrix(sid).sum()
+
+
+class TestDeepBench:
+    def test_invariants(self):
+        res = deepbench_like_workload(n_streams=2, repeats=6)
+        agg = res.stats.aggregate()
+        per = {s: int(res.stats.stream_matrix(s).sum()) for s in res.stats.streams()}
+        assert sum(per.values()) == int(agg.sum())
+        assert len(per) == 2
+
+    def test_identical_kernels_balanced(self):
+        res = deepbench_like_workload(n_streams=2, repeats=4)
+        per = [int(res.stats.stream_matrix(s).sum()) for s in res.stats.streams()]
+        assert per[0] == per[1]
+
+
+class TestResourceModel:
+    def test_mshr_entry_exhaustion(self):
+        cfg = SimConfig(mshr_entries=4, hbm_latency=500)
+        sim = TPUSimulator(cfg)
+        s = sim.create_stream()
+        # 64 independent line-sized misses vs 4 MSHRs → entry-fail stalls
+        from repro.sim.kernel_desc import streaming_trace
+
+        sim.launch(s.stream_id, KernelDesc(name="k", trace=streaming_trace(0, 64 * 512, R)))
+        res = sim.run()
+        from repro.core.stats import FailOutcome
+
+        assert res.stats(R, FailOutcome.MSHR_ENTRY_FAIL, True, s.stream_id) > 0
+
+    def test_straggler_injection_slows_stream(self):
+        base = l2_lat_multistream(2, 128)
+        cfg = SimConfig(stream_slowdown={1: 4.0})
+        slow = l2_lat_multistream(2, 128, config=cfg)
+        d_base = base.timeline.get(1, base.timeline.kernels(1)[0][0]).duration
+        d_slow = slow.timeline.get(1, slow.timeline.kernels(1)[0][0]).duration
+        assert d_slow > 2 * d_base
+        # the un-slowed stream's counts are unaffected
+        assert slow.stats.stream_matrix(2)[R].sum() == base.stats.stream_matrix(2)[R].sum()
+
+    def test_vmem_capacity_evictions(self):
+        cfg = SimConfig(vmem_capacity=16 * 512)  # 16 lines only
+        sim = TPUSimulator(cfg)
+        s = sim.create_stream()
+        trace = pointer_chase_trace(0, 64, load_size=8, stride=512) * 2  # 64 lines, walked twice
+        sim.launch(s.stream_id, KernelDesc(name="k", trace=trace, dependent=True))
+        res = sim.run()
+        m = res.stats.stream_matrix(s.stream_id)
+        # second pass misses again (working set exceeds capacity)
+        assert int(m[R, MISS]) > 64
+
+    def test_event_dependency_across_streams(self):
+        sim = TPUSimulator(SimConfig())
+        s1, s2 = sim.create_stream(), sim.create_stream()
+        ev = sim.create_event()
+        from repro.sim.kernel_desc import streaming_trace
+
+        k1 = KernelDesc(name="prod", trace=streaming_trace(0, 64 * 512, R))
+        k2 = KernelDesc(name="cons", trace=streaming_trace(1 << 22, 64 * 512, R))
+        sim.launch(s1.stream_id, k1, record_events=[ev.event_id])
+        sim.launch(s2.stream_id, k2, wait_events=[ev.event_id])
+        res = sim.run()
+        ivs = {name: (s, e) for _, _, s, e, name in res.timeline.intervals()}
+        assert ivs["cons"][0] >= ivs["prod"][1]

@@ -1,0 +1,151 @@
+"""Unit + property tests for the paper's core: per-stream stat tables."""
+
+import io
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.stats import (
+    AccessOutcome,
+    AccessType,
+    CleanStatTable,
+    StatTable,
+)
+
+R = AccessType.GLOBAL_ACC_R
+W = AccessType.GLOBAL_ACC_W
+HIT = AccessOutcome.HIT
+MISS = AccessOutcome.MISS
+
+
+class TestStatTable:
+    def test_lazy_per_stream_allocation(self):
+        t = StatTable()
+        assert t.streams() == ()
+        t.inc_stats(R, HIT, stream_id=3)
+        t.inc_stats(R, HIT, stream_id=7)
+        assert t.streams() == (3, 7)
+
+    def test_inc_and_accessor(self):
+        t = StatTable()
+        t.inc_stats(R, MISS, 1)
+        t.inc_stats(R, MISS, 1, n=4)
+        assert t(R, MISS, False, 1) == 5
+        assert t(R, MISS, False, 2) == 0  # unknown stream reads as zero
+
+    def test_per_window_independent(self):
+        t = StatTable()
+        t.inc_stats(R, HIT, 1)
+        t.inc_stats_pw(R, HIT, 1)
+        t.clear_pw()
+        assert t.get(R, HIT, 1) == 1
+        assert t.stream_matrix(1, pw=True).sum() == 0
+
+    def test_fail_stats_separate(self):
+        from repro.core.stats import FailOutcome
+
+        t = StatTable()
+        t.inc_fail_stats(R, FailOutcome.MSHR_ENTRY_FAIL, 2)
+        assert t(R, FailOutcome.MSHR_ENTRY_FAIL, True, 2) == 1
+        assert t.stream_matrix(2).sum() == 0  # not mixed into access stats
+
+    def test_aggregate_is_sum_over_streams(self):
+        t = StatTable()
+        t.inc_stats(R, HIT, 1, n=10)
+        t.inc_stats(R, HIT, 2, n=32)
+        t.inc_stats(W, MISS, 2, n=5)
+        agg = t.aggregate()
+        assert agg[R, HIT] == 42
+        assert agg[W, MISS] == 5
+
+    def test_print_only_given_stream(self):
+        t = StatTable()
+        t.inc_stats(R, HIT, 1, n=3)
+        t.inc_stats(R, HIT, 2, n=9)
+        buf = io.StringIO()
+        t.print_stats(buf, 1)
+        out = buf.getvalue()
+        assert "= 3" in out and "= 9" not in out and "stream 1" in out
+
+    def test_merge(self):
+        a, b = StatTable(), StatTable()
+        a.inc_stats(R, HIT, 1, n=2)
+        b.inc_stats(R, HIT, 1, n=3)
+        b.inc_stats(R, MISS, 4, n=7)
+        a.merge(b)
+        assert a.get(R, HIT, 1) == 5
+        assert a.get(R, MISS, 4) == 7
+
+    def test_serde_roundtrip(self):
+        t = StatTable()
+        t.inc_stats(R, HIT, 1, n=2)
+        t.inc_stats_pw(W, MISS, 9, n=6)
+        t2 = StatTable.from_dict(t.to_dict())
+        assert np.array_equal(t2.stream_matrix(1), t.stream_matrix(1))
+        assert np.array_equal(t2.stream_matrix(9, pw=True), t.stream_matrix(9, pw=True))
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        st.lists(
+            st.tuples(
+                st.integers(0, AccessType.count() - 1),
+                st.integers(0, AccessOutcome.count() - 1),
+                st.integers(0, 5),  # stream
+                st.integers(1, 100),  # n
+            ),
+            max_size=60,
+        )
+    )
+    def test_property_aggregate_equals_manual_sum(self, events):
+        t = StatTable()
+        manual = {}
+        for at, o, s, n in events:
+            t.inc_stats(at, o, s, n)
+            manual[(at, o)] = manual.get((at, o), 0) + n
+        agg = t.aggregate()
+        for (at, o), v in manual.items():
+            assert int(agg[at, o]) == v
+        # per-stream totals sum to aggregate total
+        assert sum(t.total_accesses(s) for s in t.streams()) == int(agg.sum())
+
+
+class TestCleanStatTable:
+    def test_single_stream_never_loses(self):
+        c = CleanStatTable()
+        for cyc in (1, 1, 1, 2):
+            c.inc_stats(R, HIT, cycle=cyc, stream_id=0)
+        assert c.get(R, HIT) == 4
+        assert c.lost_updates == 0
+
+    def test_cross_stream_same_cycle_loses(self):
+        c = CleanStatTable()
+        c.inc_stats(R, HIT, cycle=5, stream_id=0)
+        c.inc_stats(R, HIT, cycle=5, stream_id=1)  # lost
+        c.inc_stats(R, HIT, cycle=6, stream_id=1)  # lands
+        assert c.get(R, HIT) == 2
+        assert c.lost_updates == 1
+
+    def test_different_cells_do_not_collide(self):
+        c = CleanStatTable()
+        c.inc_stats(R, HIT, cycle=5, stream_id=0)
+        c.inc_stats(R, MISS, cycle=5, stream_id=1)
+        assert c.get(R, HIT) == 1 and c.get(R, MISS) == 1
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        st.lists(
+            st.tuples(st.integers(0, 3), st.integers(0, 2), st.integers(0, 200)),
+            max_size=80,
+        )
+    )
+    def test_property_clean_never_exceeds_tip(self, events):
+        """The paper's §5.2 invariant: Σ tip ≥ clean, always."""
+        tip, clean = StatTable(), CleanStatTable()
+        for stream, outcome, cycle in events:
+            tip.inc_stats(R, outcome, stream)
+            clean.inc_stats(R, outcome, cycle=cycle, stream_id=stream)
+        agg = tip.aggregate()
+        for o in range(3):
+            assert int(agg[R, o]) >= clean.get(R, o)
+        assert int(agg.sum()) == clean.matrix().sum() + clean.lost_updates

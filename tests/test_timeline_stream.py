@@ -1,0 +1,111 @@
+"""KernelTimeline (gpu_kernel_time analog) + StreamManager semantics."""
+
+import io
+
+import pytest
+
+from repro.core.stream import StreamManager
+from repro.core.timeline import KernelTimeline
+from repro.core.collector import StatCollector, namespace_stream, split_namespaced
+from repro.core.stats import AccessType, AccessOutcome, StatTable
+
+
+class TestKernelTimeline:
+    def test_launch_done_and_last_fields(self):
+        tl = KernelTimeline()
+        tl.on_launch(2, 10, cycle=100, name="k")
+        assert (tl.last_streamID, tl.last_uid) == (2, 10)
+        tl.on_done(2, 10, cycle=250)
+        kt = tl.get(2, 10)
+        assert kt.start_cycle == 100 and kt.end_cycle == 250 and kt.duration == 150
+
+    def test_double_launch_and_done_rejected(self):
+        tl = KernelTimeline()
+        tl.on_launch(1, 1, 0)
+        with pytest.raises(ValueError):
+            tl.on_launch(1, 1, 5)
+        tl.on_done(1, 1, 9)
+        with pytest.raises(ValueError):
+            tl.on_done(1, 1, 12)
+        with pytest.raises(KeyError):
+            tl.on_done(1, 99, 1)
+
+    def test_overlap_and_spans(self):
+        tl = KernelTimeline()
+        tl.on_launch(1, 1, 0); tl.on_done(1, 1, 100)
+        tl.on_launch(2, 2, 50); tl.on_done(2, 2, 150)
+        assert tl.overlap_cycles(1, 2) == 50
+        assert tl.makespan() == 150
+        assert tl.serialized_span() == 200
+
+    def test_print_kernel_format(self):
+        tl = KernelTimeline()
+        tl.on_launch(3, 7, 11, "foo"); tl.on_done(3, 7, 42)
+        buf = io.StringIO()
+        tl.print_kernel(buf, 3, 7)
+        assert "kernel_launch_uid = 7 stream = 3 start_cycle = 11 end_cycle = 42" in buf.getvalue()
+
+
+class TestStreamManager:
+    def test_fifo_within_stream(self):
+        sm = StreamManager()
+        s = sm.create_stream("s")
+        a = sm.launch(s.stream_id, "a")
+        b = sm.launch(s.stream_id, "b")
+        c0 = sm.launchable()
+        assert [w.uid for w in c0] == [a.uid]
+        sm.mark_launched(a)
+        assert sm.launchable() == []  # stream busy
+        sm.mark_done(a)
+        assert [w.uid for w in sm.launchable()] == [b.uid]
+
+    def test_streams_concurrent_but_serialize_patch(self):
+        sm = StreamManager()
+        s1, s2 = sm.create_stream(), sm.create_stream()
+        a = sm.launch(s1.stream_id, "a")
+        b = sm.launch(s2.stream_id, "b")
+        assert {w.uid for w in sm.launchable()} == {a.uid, b.uid}
+        sm.mark_launched(a)
+        # concurrent: b still launchable; serialized (busy_streams nonempty): not
+        assert [w.uid for w in sm.launchable()] == [b.uid]
+        assert sm.launchable(serialize=True) == []
+        sm.mark_done(a)
+        assert [w.uid for w in sm.launchable(serialize=True)] == [b.uid]
+
+    def test_cross_stream_events(self):
+        sm = StreamManager()
+        s1, s2 = sm.create_stream(), sm.create_stream()
+        ev = sm.create_event()
+        a = sm.launch(s1.stream_id, "a", record_events=[ev.event_id])
+        b = sm.launch(s2.stream_id, "b", wait_events=[ev.event_id])
+        assert [w.uid for w in sm.launchable()] == [a.uid]  # b blocked on event
+        sm.mark_launched(a)
+        sm.mark_done(a)
+        assert ev.fired
+        assert [w.uid for w in sm.launchable()] == [b.uid]
+
+
+class TestCollector:
+    def test_namespacing_roundtrip(self):
+        g = namespace_stream(3, 17)
+        assert split_namespaced(g) == (3, 17)
+
+    def test_combine_across_hosts(self):
+        snaps = []
+        for host in range(3):
+            t = StatTable()
+            t.inc_stats(AccessType.GLOBAL_ACC_R, AccessOutcome.HIT, 1, n=host + 1)
+            snaps.append(StatCollector(host, 3, namespace_streams=True).snapshot(t))
+        merged = StatCollector.combine(snaps)
+        assert len(merged.streams()) == 3  # one namespaced stream per host
+        assert int(merged.aggregate()[AccessType.GLOBAL_ACC_R, AccessOutcome.HIT]) == 6
+
+    def test_shared_stream_merge(self):
+        snaps = []
+        for host in range(2):
+            t = StatTable()
+            t.inc_stats(AccessType.ICI_SND, AccessOutcome.MISS, 5, n=10)
+            snaps.append(StatCollector(host, 2, namespace_streams=False).snapshot(t))
+        merged = StatCollector.combine(snaps)
+        assert merged.streams() == (5,)
+        assert merged.get(AccessType.ICI_SND, AccessOutcome.MISS, 5) == 20
