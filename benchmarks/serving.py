@@ -4,16 +4,23 @@ Runs the continuous-batching engine with heterogeneous request streams and
 shows exactly what the paper argues: aggregated stats hide per-stream
 behaviour.  A short request sharing the batch with a long one has wildly
 different tokens/s — visible per stream, invisible in the aggregate.
+
+Request-exit reports flow through the pluggable sink subsystem
+(``repro.core.sinks``): the same events land simultaneously in JSON and CSV
+form, and the JSON stream is cross-checked against the engine's own
+per-stream accounting.
 """
 
 from __future__ import annotations
 
+import io
 import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core import CSVSink, JSONSink
 from repro.core.stats import AccessOutcome, AccessType
 from repro.models import init_params, model_defs
 from repro.serve import Engine, Request, ServeConfig
@@ -24,7 +31,9 @@ from .common import csv_line
 def run(verbose: bool = True) -> dict:
     cfg = get_smoke_config("deepseek-7b")
     params = init_params(model_defs(cfg), jax.random.PRNGKey(0), cfg.param_jdtype())
-    eng = Engine(cfg, params, ServeConfig(n_slots=4, max_len=128))
+    json_buf, csv_buf = io.StringIO(), io.StringIO()
+    eng = Engine(cfg, params, ServeConfig(n_slots=4, max_len=128),
+                 sinks=[JSONSink(json_buf), CSVSink(csv_buf)])
     rng = np.random.default_rng(7)
 
     reqs = []
@@ -44,10 +53,24 @@ def run(verbose: bool = True) -> dict:
     report = eng.per_stream_report()
     agg_kv = int(eng.table.aggregate()[AccessType.KV_ACC_W, AccessOutcome.MISS])
     sum_kv = int(sum(v["kv_bytes"] for v in report.values()))
+
+    # Cross-check the sink stream against the engine's own accounting: the
+    # JSON exit reports carry each stream's KV_ACC_W bytes.
+    sink_objs = JSONSink.parse(json_buf.getvalue())
+    sink_kv = 0
+    for obj in sink_objs:
+        for blk in obj["blocks"]:
+            m = JSONSink.block_matrix(blk)
+            sink_kv += int(m[AccessType.KV_ACC_W, AccessOutcome.MISS])
+    csv_rows = CSVSink.parse(csv_buf.getvalue())
+
     checks = {
         "all_done": all(r.done for r in reqs),
         "kv_per_stream_sums_to_agg": agg_kv == sum_kv,
         "per_stream_visibility": len({round(v.get("tokens", 0)) for v in report.values()}) > 1,
+        "sink_reports_one_per_request": len(sink_objs) == len(reqs),
+        "sink_kv_matches_agg": sink_kv == agg_kv,
+        "csv_rows_nonempty": len(csv_rows) >= len(reqs),
     }
     if verbose:
         for r in reqs:
@@ -55,7 +78,8 @@ def run(verbose: bool = True) -> dict:
             print(f"  {r.name:14s} stream={r.stream_id} gen={len(r.generated):3d} "
                   f"prefill={r.prefill_s*1e3:7.1f}ms decode={r.decode_s*1e3:7.1f}ms "
                   f"kv_bytes={int(s.get('kv_bytes', 0))}")
-        print(f"aggregate kv bytes = {agg_kv} (== Σ per-stream: {agg_kv == sum_kv})")
+        print(f"aggregate kv bytes = {agg_kv} (== Σ per-stream: {agg_kv == sum_kv}, "
+              f"== Σ sink reports: {sink_kv == agg_kv})")
         print("checks:", checks)
     ok = all(checks.values())
     csv_line("serving_multistream", wall_us, f"checks_pass={ok}")

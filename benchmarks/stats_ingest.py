@@ -1,0 +1,134 @@
+"""StatsEngine ingestion microbenchmark — the tentpole's receipts.
+
+Replays one synthetic multi-stream access trace (with §5.2 same-cycle
+collisions) through three ingestion paths:
+
+* ``seed``          — the per-increment reference: ``StatTable.inc_stats`` +
+                      ``inc_stats_pw`` + ``CleanStatTable.inc_stats`` per event
+                      (exactly what the seed executor's ``_count`` did);
+* ``engine_scalar`` — ``StatsEngine.record`` per event (buffered columns,
+                      vectorized flush);
+* ``engine_batch``  — ``StatsEngine.record_batch`` over the whole trace
+                      (the batch ingestion path).
+
+Verifies all three agree on every count, then reports events/s and the
+speedup over the seed path.  Acceptance: batch ingestion ≥ 5× seed.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import CleanStatTable, StatsEngine, StatTable
+from repro.core.stats import AccessOutcome, AccessType
+
+from .common import csv_line
+
+N_EVENTS = 200_000
+N_STREAMS = 8
+
+
+def make_trace(n_events: int = N_EVENTS, seed: int = 0):
+    """Columnar (type, outcome, stream, n, cycle) trace, collision-rich."""
+    rng = np.random.default_rng(seed)
+    types = rng.integers(0, AccessType.count(), n_events, dtype=np.int64)
+    outs = rng.integers(0, AccessOutcome.count(), n_events, dtype=np.int64)
+    streams = rng.integers(0, N_STREAMS, n_events, dtype=np.int64)
+    counts = rng.integers(1, 4, n_events, dtype=np.uint64)
+    # ~3 events per cycle on average → frequent same-cycle collisions
+    cycles = np.cumsum(rng.random(n_events) < 1 / 3).astype(np.int64)
+    return types, outs, streams, counts, cycles
+
+
+def ingest_seed(trace):
+    types, outs, streams, counts, cycles = trace
+    tip, clean = StatTable(), CleanStatTable()
+    for t, o, s, n, cy in zip(
+        types.tolist(), outs.tolist(), streams.tolist(), counts.tolist(), cycles.tolist()
+    ):
+        tip.inc_stats(t, o, s, n)
+        tip.inc_stats_pw(t, o, s, n)
+        clean.inc_stats(t, o, cycle=cy, stream_id=s, n=n)
+    return tip, clean
+
+
+def ingest_engine_scalar(trace):
+    types, outs, streams, counts, cycles = trace
+    eng = StatsEngine()
+    for t, o, s, n, cy in zip(
+        types.tolist(), outs.tolist(), streams.tolist(), counts.tolist(), cycles.tolist()
+    ):
+        eng.record(t, o, s, n, cy)
+    eng.flush()
+    return eng
+
+
+def ingest_engine_batch(trace):
+    types, outs, streams, counts, cycles = trace
+    eng = StatsEngine()
+    eng.record_batch(types, outs, streams, counts, cycles)
+    eng.flush()
+    return eng
+
+
+def _time(fn, *args) -> float:
+    t0 = time.perf_counter()
+    fn(*args)
+    return time.perf_counter() - t0
+
+
+def run(verbose: bool = True, n_events: int = N_EVENTS) -> dict:
+    trace = make_trace(n_events)
+
+    # -- correctness first: all three paths must agree exactly ----------------
+    tip, clean = ingest_seed(trace)
+    scalar = ingest_engine_scalar(trace)
+    batch = ingest_engine_batch(trace)
+    identical = True
+    for eng in (scalar, batch):
+        identical &= eng.streams() == tip.streams()
+        identical &= bool(np.array_equal(eng.aggregate(), tip.aggregate()))
+        for sid in tip.streams():
+            identical &= bool(np.array_equal(eng.stream_matrix(sid), tip.stream_matrix(sid)))
+        identical &= bool(np.array_equal(eng.clean.matrix(), clean.matrix()))
+        identical &= eng.clean.lost_updates == clean.lost_updates
+
+    # -- timing ----------------------------------------------------------------
+    t_seed = min(_time(ingest_seed, trace) for _ in range(2))
+    t_scalar = min(_time(ingest_engine_scalar, trace) for _ in range(2))
+    t_batch = min(_time(ingest_engine_batch, trace) for _ in range(3))
+
+    speedup_batch = t_seed / t_batch if t_batch > 0 else float("inf")
+    speedup_scalar = t_seed / t_scalar if t_scalar > 0 else float("inf")
+    ok = identical and speedup_batch >= 5.0
+
+    if verbose:
+        print(f"  events: {n_events}, streams: {N_STREAMS}, "
+              f"lost updates (collisions): {clean.lost_updates}")
+        print(f"  seed per-increment : {t_seed*1e3:8.1f} ms  "
+              f"({n_events/t_seed/1e6:6.2f} Mev/s)")
+        print(f"  engine scalar      : {t_scalar*1e3:8.1f} ms  "
+              f"({n_events/t_scalar/1e6:6.2f} Mev/s)  {speedup_scalar:5.1f}x")
+        print(f"  engine batch       : {t_batch*1e3:8.1f} ms  "
+              f"({n_events/t_batch/1e6:6.2f} Mev/s)  {speedup_batch:5.1f}x")
+        print(f"  counts identical across all paths: {identical}")
+        print(f"  acceptance (batch >= 5x, identical): {ok}")
+
+    csv_line(
+        "stats_ingest",
+        t_batch / n_events * 1e6,
+        f"batch_speedup={speedup_batch:.1f}x scalar_speedup={speedup_scalar:.1f}x "
+        f"identical={identical} ok={ok}",
+    )
+    return {
+        "ok": ok,
+        "identical": identical,
+        "speedup_batch": speedup_batch,
+        "speedup_scalar": speedup_scalar,
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -5,11 +5,16 @@ Public API:
     from repro.core import (
         AccessType, AccessOutcome, FailOutcome,
         StatTable, CleanStatTable,
+        StatsEngine,                      # vectorized batch ingestion
+        Report, StatBlock,                # report model
+        TextSink, JSONSink, CSVSink,      # pluggable report sinks
         KernelTimeline, KernelTime,
         Stream, StreamManager,
         StreamStats, StepCost, stream_scope, current_stream,
         StatCollector,
     )
+
+See docs/DESIGN.md for the architecture and the paper-section cross-reference.
 """
 
 from .stats import (
@@ -19,6 +24,19 @@ from .stats import (
     CleanStatTable,
     FailOutcome,
     StatTable,
+    format_breakdown,
+)
+from .engine import CleanView, StatsEngine
+from .sinks import (
+    CSVSink,
+    JSONSink,
+    MultiSink,
+    Report,
+    ReportSink,
+    StatBlock,
+    TextSink,
+    make_sink,
+    render_text,
 )
 from .timeline import KernelTime, KernelTimeline
 from .stream import Stream, StreamEvent, StreamManager, WorkItem
@@ -32,6 +50,18 @@ __all__ = [
     "CleanStatTable",
     "FailOutcome",
     "StatTable",
+    "format_breakdown",
+    "StatsEngine",
+    "CleanView",
+    "Report",
+    "StatBlock",
+    "ReportSink",
+    "TextSink",
+    "JSONSink",
+    "CSVSink",
+    "MultiSink",
+    "make_sink",
+    "render_text",
     "KernelTime",
     "KernelTimeline",
     "Stream",

@@ -49,7 +49,12 @@ class StatCollector:
 
     # -- local → wire -----------------------------------------------------------
     def snapshot(self, table: StatTable) -> str:
-        """Serialise the local table (optionally stream-namespaced) to JSON."""
+        """Serialise the local table (optionally stream-namespaced) to JSON.
+
+        Accepts a plain :class:`StatTable` or anything exposing
+        ``as_stat_table()`` (e.g. :class:`repro.core.engine.StatsEngine`)."""
+        if hasattr(table, "as_stat_table"):
+            table = table.as_stat_table()
         if self.namespace_streams:
             remapped = StatTable(table._n_types, table._n_outcomes, table._n_fail, table.name)
             for store_name in ("_stats", "_stats_pw", "_fail_stats"):

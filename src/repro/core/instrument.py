@@ -23,10 +23,11 @@ import contextlib
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, IO, Iterator, List, Optional, Tuple
+from typing import Dict, IO, Iterable, Iterator, List, Optional, Tuple
 
 import sys
 
+from .sinks import Report, ReportSink, StatBlock, TextSink
 from .stats import DEFAULT_STREAM, StatTable, AccessType, AccessOutcome
 from .timeline import KernelTimeline
 
@@ -178,13 +179,40 @@ class StreamStats:
             "collective_bytes": sum(r.cost.collective_bytes for r in rs),
         }
 
-    def print_summary(self, fout: IO[str] = sys.stdout) -> None:
+    # -- reporting (sink subsystem; see repro.core.sinks) -------------------------
+    def reports(self, source: str = "runtime") -> "list[Report]":
+        """One :class:`Report` per stream — the summary line plus the
+        byte-attribution block, consumable by any sink."""
+        out = []
         for sid in self.streams():
             s = self.summary(sid)
-            fout.write(
+            header = (
                 f"stream {sid}: steps={s['steps']} tokens={s.get('tokens', 0)} "
                 f"time={s.get('seconds', 0.0):.3f}s "
                 f"tok/s={s.get('tokens_per_s', 0.0):.1f} "
                 f"TFLOP/s={s.get('flops_per_s', 0.0) / 1e12:.3f}\n"
             )
-            self.table.print_stats(fout, sid, "Runtime_bytes")
+            out.append(
+                Report(
+                    source=source,
+                    event="stream_summary",
+                    stream_id=sid,
+                    header=header,
+                    fields={k: v for k, v in s.items()},
+                    blocks=[StatBlock("Runtime_bytes", self.table.stream_matrix(sid))],
+                )
+            )
+        return out
+
+    def emit(self, sinks: "Iterable[ReportSink]", source: str = "runtime") -> int:
+        """Push every stream's summary report through the given sinks."""
+        reports = self.reports(source)
+        for sink in sinks:
+            for rep in reports:
+                sink.emit(rep)
+        return len(reports)
+
+    def print_summary(self, fout: IO[str] = sys.stdout) -> None:
+        sink = TextSink(fout)
+        for rep in self.reports():
+            sink.emit(rep)

@@ -1,0 +1,204 @@
+"""Pluggable report sinks — one reporting code path for every subsystem.
+
+The seed had three ad-hoc printers: the simulator's kernel-exit dump
+(``sim/executor.py``), the serving engine's request exit report
+(``serve/engine.py``) and the live-runtime summary
+(``core/instrument.py``).  All three now build a :class:`Report` and hand it
+to whatever sinks the caller plugged in:
+
+* :class:`TextSink` — the per-kernel-exit printer, byte-identical to the
+  seed output (it renders stat blocks through
+  :func:`repro.core.stats.format_breakdown`, the same formatter the legacy
+  ``print_stats`` path uses);
+* :class:`JSONSink` — newline-delimited JSON, one object per report;
+* :class:`CSVSink`  — one row per nonzero stat cell.
+
+``make_sink("text" | "json" | "csv", fout)`` builds one by name;
+:class:`MultiSink` fans a report out to several.  See docs/DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import csv
+import io
+import json
+from dataclasses import dataclass, field
+from typing import IO, Dict, Iterable, List, Sequence
+
+import numpy as np
+
+from .stats import format_breakdown, _outcome_name, _type_name
+
+__all__ = [
+    "StatBlock",
+    "Report",
+    "ReportSink",
+    "TextSink",
+    "JSONSink",
+    "CSVSink",
+    "MultiSink",
+    "make_sink",
+    "render_text",
+    "SINK_KINDS",
+]
+
+
+@dataclass
+class StatBlock:
+    """One named per-stream count matrix inside a report."""
+
+    cache_name: str
+    matrix: np.ndarray  # (n_types, n_outcomes) uint64
+    fail: bool = False  # outcome axis uses FailOutcome names
+
+
+@dataclass
+class Report:
+    """A per-stream reporting event (kernel exit, request done, summary)."""
+
+    source: str  # emitting subsystem: "sim" / "serve" / "train" / ...
+    event: str  # "kernel_exit" / "request_done" / "stream_summary" / ...
+    stream_id: int
+    header: str = ""  # preformatted header lines (text sink only)
+    fields: Dict[str, object] = field(default_factory=dict)
+    blocks: List[StatBlock] = field(default_factory=list)
+
+
+class ReportSink:
+    """Base sink: receives reports, owns no formatting of its own."""
+
+    def emit(self, report: Report) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class TextSink(ReportSink):
+    """Seed-format text printer: header lines, then each stat block via the
+    canonical breakdown formatter."""
+
+    def __init__(self, fout: IO[str]) -> None:
+        self.fout = fout
+
+    def emit(self, report: Report) -> None:
+        if report.header:
+            self.fout.write(report.header)
+        for b in report.blocks:
+            self.fout.write(format_breakdown(b.cache_name, report.stream_id, b.matrix, fail=b.fail))
+
+
+def _block_cells(block: StatBlock) -> Iterable:
+    m = block.matrix
+    for t, o in zip(*np.nonzero(m)):
+        yield int(t), int(o), _type_name(int(t)), _outcome_name(int(o), fail=block.fail), int(m[t, o])
+
+
+class JSONSink(ReportSink):
+    """Newline-delimited JSON: one self-describing object per report."""
+
+    def __init__(self, fout: IO[str]) -> None:
+        self.fout = fout
+
+    def emit(self, report: Report) -> None:
+        obj = {
+            "source": report.source,
+            "event": report.event,
+            "stream_id": report.stream_id,
+            "fields": {k: v for k, v in report.fields.items()},
+            "blocks": [
+                {
+                    "cache_name": b.cache_name,
+                    "fail": b.fail,
+                    "shape": list(b.matrix.shape),
+                    "cells": [
+                        {"type": t, "outcome": o, "type_name": tn, "outcome_name": on, "count": v}
+                        for t, o, tn, on, v in _block_cells(b)
+                    ],
+                }
+                for b in report.blocks
+            ],
+        }
+        self.fout.write(json.dumps(obj) + "\n")
+
+    @staticmethod
+    def parse(text: str) -> List[dict]:
+        """Inverse of :meth:`emit` for a whole NDJSON document."""
+        return [json.loads(line) for line in text.splitlines() if line.strip()]
+
+    @staticmethod
+    def block_matrix(block_obj: dict) -> np.ndarray:
+        """Rebuild a block's count matrix from its parsed JSON object."""
+        m = np.zeros(tuple(block_obj["shape"]), dtype=np.uint64)
+        for cell in block_obj["cells"]:
+            m[cell["type"], cell["outcome"]] = np.uint64(cell["count"])
+        return m
+
+
+CSV_HEADER = ("source", "event", "stream_id", "cache_name", "access_type", "outcome", "count")
+
+
+class CSVSink(ReportSink):
+    """One CSV row per nonzero stat cell; header written lazily."""
+
+    def __init__(self, fout: IO[str]) -> None:
+        self.fout = fout
+        self._writer = csv.writer(fout, lineterminator="\n")
+        self._wrote_header = False
+
+    def emit(self, report: Report) -> None:
+        if not self._wrote_header:
+            self._writer.writerow(CSV_HEADER)
+            self._wrote_header = True
+        for b in report.blocks:
+            for _t, _o, tn, on, v in _block_cells(b):
+                self._writer.writerow(
+                    (report.source, report.event, report.stream_id, b.cache_name, tn, on, v)
+                )
+
+    @staticmethod
+    def parse(text: str) -> List[dict]:
+        """Rows as dicts keyed by :data:`CSV_HEADER` (counts as ints)."""
+        rows = list(csv.reader(io.StringIO(text)))
+        if not rows:
+            return []
+        header, body = rows[0], rows[1:]
+        out = []
+        for r in body:
+            d = dict(zip(header, r))
+            d["stream_id"] = int(d["stream_id"])
+            d["count"] = int(d["count"])
+            out.append(d)
+        return out
+
+
+class MultiSink(ReportSink):
+    """Fan one report out to several sinks."""
+
+    def __init__(self, sinks: Sequence[ReportSink]) -> None:
+        self.sinks = list(sinks)
+
+    def emit(self, report: Report) -> None:
+        for s in self.sinks:
+            s.emit(report)
+
+    def close(self) -> None:
+        for s in self.sinks:
+            s.close()
+
+
+SINK_KINDS = {"text": TextSink, "json": JSONSink, "csv": CSVSink}
+
+
+def make_sink(kind: str, fout: IO[str]) -> ReportSink:
+    try:
+        return SINK_KINDS[kind](fout)
+    except KeyError:
+        raise ValueError(f"unknown sink kind {kind!r}; expected one of {sorted(SINK_KINDS)}") from None
+
+
+def render_text(report: Report) -> str:
+    """Convenience: the exact text a :class:`TextSink` would write."""
+    buf = io.StringIO()
+    TextSink(buf).emit(report)
+    return buf.getvalue()

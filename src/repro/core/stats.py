@@ -24,8 +24,12 @@ This module is the JAX-framework translation of that change:
   ``m_fail_stats``.
 
 On TPU the access types/outcomes describe the HBM→VMEM software-managed
-hierarchy rather than a hardware L1/L2 (see DESIGN.md §2), but the
+hierarchy rather than a hardware L1/L2 (see docs/DESIGN.md §2), but the
 classification structure is byte-for-byte the paper's.
+
+For the hot path, :class:`repro.core.engine.StatsEngine` provides vectorized
+batch ingestion over these same tables (see docs/DESIGN.md §4); the classes
+here remain the reference semantics it is validated against.
 """
 
 from __future__ import annotations
@@ -44,6 +48,7 @@ __all__ = [
     "StatTable",
     "CleanStatTable",
     "DEFAULT_STREAM",
+    "format_breakdown",
 ]
 
 #: CUDA's default stream is 0; we keep the same convention.
@@ -125,6 +130,38 @@ class FailOutcome(enum.IntEnum):
 
 def _new_matrix(n_rows: int, n_cols: int) -> np.ndarray:
     return np.zeros((n_rows, n_cols), dtype=np.uint64)
+
+
+def _type_name(t: int) -> str:
+    return AccessType(t).name if t < AccessType.count() else f"TYPE_{t}"
+
+
+def _outcome_name(o: int, *, fail: bool = False) -> str:
+    if fail:
+        return FailOutcome(o).name if o < FailOutcome.count() else f"FAIL_{o}"
+    if o < AccessOutcome.count():
+        return _OUTCOME_NAMES.get(AccessOutcome(o), f"OUT_{o}")
+    return f"OUT_{o}"
+
+
+def format_breakdown(name: str, stream_id: int, matrix: np.ndarray, *, fail: bool = False) -> str:
+    """Render one stream's ``(T, O)`` count matrix in the canonical per-kernel
+    exit format (the paper's ``print_stats`` output).
+
+    This is the single source of truth for that format: both the legacy
+    :meth:`StatTable.print_stats` path and the sink subsystem's text sink
+    (:class:`repro.core.sinks.TextSink`) call it, so their output is
+    byte-identical by construction.
+    """
+    lines = [f"{name}_breakdown (stream {stream_id}):"]
+    n_rows, n_cols = matrix.shape
+    for t in range(n_rows):
+        tname = _type_name(t)
+        for o in range(n_cols):
+            v = int(matrix[t, o])
+            if v:
+                lines.append(f"\t{name}[{tname}][{_outcome_name(o, fail=fail)}] = {v}")
+    return "\n".join(lines) + "\n"
 
 
 class StatTable:
@@ -274,19 +311,7 @@ class StatTable:
         given stream's breakdown (the paper's fix for the redundant
         all-stream dump on every kernel exit)."""
         name = cache_name or self.name
-        m = self.stream_matrix(stream_id)
-        fout.write(f"{name}_breakdown (stream {stream_id}):\n")
-        for t in range(self._n_types):
-            tname = AccessType(t).name if t < AccessType.count() else f"TYPE_{t}"
-            for o in range(self._n_outcomes):
-                v = int(m[t, o])
-                if v:
-                    oname = (
-                        _OUTCOME_NAMES.get(AccessOutcome(o), f"OUT_{o}")
-                        if o < AccessOutcome.count()
-                        else f"OUT_{o}"
-                    )
-                    fout.write(f"\t{name}[{tname}][{oname}] = {v}\n")
+        fout.write(format_breakdown(name, stream_id, self.stream_matrix(stream_id)))
 
     def print_fail_stats(
         self,
@@ -295,15 +320,7 @@ class StatTable:
         cache_name: Optional[str] = None,
     ) -> None:
         name = cache_name or f"{self.name}_fail"
-        m = self.stream_matrix(stream_id, fail=True)
-        fout.write(f"{name}_breakdown (stream {stream_id}):\n")
-        for t in range(self._n_types):
-            tname = AccessType(t).name if t < AccessType.count() else f"TYPE_{t}"
-            for o in range(self._n_fail):
-                v = int(m[t, o])
-                if v:
-                    oname = FailOutcome(o).name if o < FailOutcome.count() else f"FAIL_{o}"
-                    fout.write(f"\t{name}[{tname}][{oname}] = {v}\n")
+        fout.write(format_breakdown(name, stream_id, self.stream_matrix(stream_id, fail=True), fail=True))
 
 
 class CleanStatTable:

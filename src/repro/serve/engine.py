@@ -35,9 +35,13 @@ from repro.configs.base import ModelConfig
 from repro.core import (
     AccessOutcome,
     AccessType,
-    StatTable,
+    Report,
+    ReportSink,
+    StatBlock,
+    StatsEngine,
     StreamManager,
     StreamStats,
+    render_text,
 )
 from repro.models import decode_step, init_cache, prefill
 from .cache_utils import transplant
@@ -68,13 +72,21 @@ class ServeConfig:
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig) -> None:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        scfg: ServeConfig,
+        sinks: Optional[List[ReportSink]] = None,
+    ) -> None:
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self.streams = StreamManager()
         self.stats = StreamStats()
-        self.table = StatTable(name="Serve_stats")  # per-stream KV/byte rows
+        # per-stream KV/byte rows; vectorized batch ingestion on the decode path
+        self.table = StatsEngine(name="Serve_stats")
+        self.sinks: List[ReportSink] = list(sinks) if sinks else []
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * scfg.n_slots
         self.pos = np.zeros((scfg.n_slots,), np.int32)  # next write position
@@ -148,13 +160,22 @@ class Engine:
         logits, self.cache = self._decode(self.params, self.cache, tokens, pos)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         dt = time.perf_counter() - t0
+        # One vectorized ingest for the whole decode batch: every active
+        # slot wrote one token's KV bytes on its own stream this step.
+        # Cumulative lane only — same stores the seed's inc_stats loop fed.
+        sids = np.fromiter((self.slots[i].stream_id for i in active), dtype=np.int64, count=len(active))
+        self.table.record_batch(
+            np.full(len(active), int(AccessType.KV_ACC_W), dtype=np.int64),
+            np.full(len(active), int(AccessOutcome.MISS), dtype=np.int64),
+            sids,
+            np.full(len(active), self._kv_bytes_per_token, dtype=np.uint64),
+            pw=False,
+            clean=False,
+        )
         for i in active:
             req = self.slots[i]
             req.decode_s += dt / len(active)  # fair-share attribution
             self.stats.step_end(uids[i], tokens=1)
-            self.table.inc_stats(
-                AccessType.KV_ACC_W, AccessOutcome.MISS, req.stream_id, self._kv_bytes_per_token
-            )
             req.generated.append(int(nxt[i]))
             self.pos[i] += 1
             self.last_token[i] = nxt[i]
@@ -167,12 +188,23 @@ class Engine:
     def _retire(self, slot: int) -> None:
         req = self.slots[slot]
         self.slots[slot] = None
-        # paper §3.1: on exit, print only this stream's stats
-        import io
-
-        buf = io.StringIO()
-        self.table.print_stats(buf, req.stream_id, "Serve_stats")
-        req.exit_report = buf.getvalue()
+        # paper §3.1: on exit, report only this stream's stats.  Same sink
+        # code path as the simulator's kernel-exit and the trainer's summary.
+        report = Report(
+            source="serve",
+            event="request_done",
+            stream_id=req.stream_id,
+            fields={
+                "name": req.name,
+                "tokens_out": len(req.generated),
+                "prefill_s": req.prefill_s,
+                "decode_s": req.decode_s,
+            },
+            blocks=[StatBlock("Serve_stats", self.table.stream_matrix(req.stream_id))],
+        )
+        req.exit_report = render_text(report)
+        for sink in self.sinks:
+            sink.emit(report)
 
     def run_until_idle(self, max_steps: int = 10_000) -> List[Request]:
         done: List[Request] = []

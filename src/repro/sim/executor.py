@@ -23,12 +23,9 @@ from typing import Dict, IO, List, Optional, Sequence, Tuple
 
 import io
 
-from repro.core.stats import (
-    AccessOutcome,
-    AccessType,
-    CleanStatTable,
-    StatTable,
-)
+from repro.core.engine import CleanView, StatsEngine
+from repro.core.sinks import Report, ReportSink, StatBlock, render_text
+from repro.core.stats import AccessOutcome, AccessType
 from repro.core.stream import StreamManager, WorkItem
 from repro.core.timeline import KernelTimeline
 
@@ -64,9 +61,9 @@ class SimConfig:
 @dataclass
 class SimResult:
     cycles: int
-    stats: StatTable  # tip (per-stream)
-    clean: CleanStatTable  # baseline emulation (aggregated + undercount bug)
-    clean_fail: CleanStatTable
+    stats: StatsEngine  # tip (per-stream), StatTable-compatible API
+    clean: CleanView  # baseline emulation (aggregated + undercount bug)
+    clean_fail: CleanView
     timeline: KernelTimeline
     log: List[str]
 
@@ -112,14 +109,23 @@ class _Run:
 class TPUSimulator:
     """Discrete-event simulator with per-stream stat tracking."""
 
-    def __init__(self, config: Optional[SimConfig] = None) -> None:
+    def __init__(
+        self,
+        config: Optional[SimConfig] = None,
+        sinks: Optional[Sequence[ReportSink]] = None,
+    ) -> None:
         self.cfg = config or SimConfig()
         self.streams = StreamManager()
-        self.stats = StatTable(name="Total_core_cache_stats")
-        self.clean = CleanStatTable(name="Total_core_cache_stats")
-        self.clean_fail = CleanStatTable(
-            n_outcomes=max(AccessOutcome.count(), 8), name="Cache_fail_stats"
+        # One engine drives all three stat views (tip / per-window / clean):
+        # events buffer in columnar form and land via vectorized scatters.
+        self.engine = StatsEngine(
+            name="Total_core_cache_stats",
+            clean_fail_cols=max(AccessOutcome.count(), 8),
         )
+        self.stats = self.engine  # StatTable-compatible view (tip)
+        self.clean = self.engine.clean
+        self.clean_fail = self.engine.clean_fail
+        self.sinks: List[ReportSink] = list(sinks) if sinks else []
         self.timeline = KernelTimeline()
         self.hbm = Bandwidth(self.cfg.hbm_bytes_per_cycle)
         self.ici = Bandwidth(self.cfg.ici_bytes_per_cycle)
@@ -256,8 +262,7 @@ class TPUSimulator:
                 tag, access.atype in (AccessType.GLOBAL_ACC_W, AccessType.KV_ACC_W), cycle, sid
             )
             if decision.outcome == AccessOutcome.RESERVATION_FAILURE:
-                self.stats.inc_fail_stats(access.atype, decision.fail_reason, sid)
-                self.clean_fail.inc_stats(access.atype, decision.fail_reason, cycle, sid)
+                self.engine.record_fail(access.atype, decision.fail_reason, sid, 1, cycle)
                 return None
             self._count(access.atype, decision.outcome, sid, cycle, 1)
             last_decision = decision
@@ -300,12 +305,10 @@ class TPUSimulator:
 
     def _count(self, atype: int, outcome: int, sid: int, cycle: int, n: int) -> None:
         """One event → all three stat views (tip per-stream, tip per-window,
-        clean-with-undercount).  ``n`` covers beat-compressed events."""
-        self.stats.inc_stats(atype, outcome, sid, n)
-        self.stats.inc_stats_pw(atype, outcome, sid, n)
-        # The clean build loses the update iff a *different* stream touched
-        # the same (type, outcome) cell in the same cycle (§5.2).
-        self.clean.inc_stats(atype, outcome, cycle, sid, n)
+        clean-with-undercount).  ``n`` covers beat-compressed events.  The
+        clean build loses the update iff a *different* stream touched the
+        same (type, outcome) cell in the same cycle (§5.2)."""
+        self.engine.record(atype, outcome, sid, n, cycle)
 
     # -- retire ------------------------------------------------------------------------
     def _retire(self, run: _Run, cycle: int) -> None:
@@ -313,12 +316,29 @@ class TPUSimulator:
         self.streams.mark_done(run.work)
         self.timeline.on_done(run.work.stream_id, run.desc.uid, cycle)
         sid = run.work.stream_id
-        # Paper §3.1: print only the exiting kernel's stream stats.
+        # Paper §3.1: report only the exiting kernel's stream stats.  The
+        # report goes through the sink subsystem; the text rendering is
+        # byte-identical to the seed printer (shared formatter).
         buf = io.StringIO()
         buf.write(f"kernel '{run.desc.name}' uid {run.desc.uid} finished on stream {sid} @ cycle {cycle}\n")
         self.timeline.print_kernel(buf, sid, run.desc.uid)
-        self.stats.print_stats(buf, sid, "Total_core_cache_stats")
-        self.stats.print_fail_stats(buf, sid, "Total_core_cache_fail_stats")
-        self._emit(buf.getvalue().rstrip("\n"))
+        report = Report(
+            source="sim",
+            event="kernel_exit",
+            stream_id=sid,
+            header=buf.getvalue(),
+            fields={"kernel": run.desc.name, "uid": run.desc.uid, "cycle": cycle},
+            blocks=[
+                StatBlock("Total_core_cache_stats", self.engine.stream_matrix(sid)),
+                StatBlock(
+                    "Total_core_cache_fail_stats",
+                    self.engine.stream_matrix(sid, fail=True),
+                    fail=True,
+                ),
+            ],
+        )
+        self._emit(render_text(report).rstrip("\n"))
+        for sink in self.sinks:
+            sink.emit(report)
         # End of the kernel's stat window (m_stats_pw semantics).
-        self.stats.clear_pw()
+        self.engine.clear_pw()

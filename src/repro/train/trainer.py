@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import StepCost, StreamStats
+from repro.core import ReportSink, StepCost, StreamStats
 from repro.models import forward, init_params, model_defs
 from repro.optim import (
     AdamWConfig,
@@ -158,6 +158,7 @@ class Trainer:
         ckpt_manager=None,
         ckpt_every: int = 0,
         eval_every: int = 0,
+        sinks: Optional[Tuple[ReportSink, ...]] = None,
     ) -> None:
         self.cfg = cfg
         self.tcfg = tcfg
@@ -166,6 +167,7 @@ class Trainer:
         self.ckpt = ckpt_manager
         self.ckpt_every = ckpt_every
         self.eval_every = eval_every
+        self.sinks = list(sinks) if sinks else []
         self.stats = StreamStats()
         from repro.core import StreamManager
 
@@ -220,4 +222,12 @@ class Trainer:
                 ebatch = next(self.eval_iter)
                 with self.stats.step("eval_step", self.eval_stream):
                     self.eval_fn(params, ebatch)
+        self.emit_reports()
         return params, opt_state, history
+
+    def emit_reports(self) -> int:
+        """Per-stream summary reports (train/eval lanes) through the plugged
+        sinks — the same reporting path the simulator and serving engine use."""
+        if not self.sinks:
+            return 0
+        return self.stats.emit(self.sinks, source="train")

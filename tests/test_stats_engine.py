@@ -1,0 +1,228 @@
+"""StatsEngine ↔ reference-table equivalence.
+
+The acceptance bar for the vectorized engine is *identity*: on any event
+stream — including §5.2 same-cycle collisions and arbitrary flush
+boundaries — it must produce exactly the counts the seed
+``StatTable`` / ``CleanStatTable`` pair produces one increment at a time.
+"""
+
+import io
+
+import numpy as np
+import pytest
+
+from repro.core import CleanStatTable, StatCollector, StatsEngine, StatTable
+from repro.core.stats import AccessOutcome, AccessType, FailOutcome
+
+R = AccessType.GLOBAL_ACC_R
+W = AccessType.GLOBAL_ACC_W
+HIT = AccessOutcome.HIT
+MISS = AccessOutcome.MISS
+
+T = AccessType.count()
+O = AccessOutcome.count()
+
+
+def _random_events(seed, n_events, n_streams=6, max_cycle_step=2, collision_rate=0.7):
+    """(type, outcome, stream, n, cycle) tuples with frequent same-cycle
+    cross-stream collisions (the §5.2 trigger)."""
+    rng = np.random.default_rng(seed)
+    events, cycle = [], 0
+    for _ in range(n_events):
+        if rng.random() > collision_rate:
+            cycle += int(rng.integers(1, max_cycle_step + 1))
+        events.append(
+            (
+                int(rng.integers(0, T)),
+                int(rng.integers(0, O)),
+                int(rng.integers(0, n_streams)),
+                int(rng.integers(1, 5)),
+                cycle,
+            )
+        )
+    return events
+
+
+def _drive_reference(events):
+    tip, clean = StatTable(), CleanStatTable()
+    for t, o, s, n, cy in events:
+        tip.inc_stats(t, o, s, n)
+        tip.inc_stats_pw(t, o, s, n)
+        clean.inc_stats(t, o, cycle=cy, stream_id=s, n=n)
+    return tip, clean
+
+
+def _assert_identical(engine, tip, clean):
+    assert engine.streams() == tip.streams()
+    for sid in tip.streams():
+        assert np.array_equal(engine.stream_matrix(sid), tip.stream_matrix(sid))
+        assert np.array_equal(engine.stream_matrix(sid, pw=True), tip.stream_matrix(sid, pw=True))
+    assert np.array_equal(engine.aggregate(), tip.aggregate())
+    assert np.array_equal(engine.clean.matrix(), clean.matrix())
+    assert engine.clean.lost_updates == clean.lost_updates
+
+
+class TestIdentityWithReference:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_scalar_record_identical(self, seed):
+        events = _random_events(seed, 3000)
+        engine = StatsEngine()
+        for t, o, s, n, cy in events:
+            engine.record(t, o, s, n, cy)
+        _assert_identical(engine, *_drive_reference(events))
+
+    @pytest.mark.parametrize("capacity", [1, 2, 7, 64, 1 << 16])
+    def test_flush_boundaries_do_not_change_counts(self, capacity):
+        """§5.2 carry state must survive a flush that splits a cycle."""
+        events = _random_events(11, 2000)
+        engine = StatsEngine(capacity=capacity)
+        rng = np.random.default_rng(7)
+        for t, o, s, n, cy in events:
+            engine.record(t, o, s, n, cy)
+            if rng.random() < 0.05:
+                engine.flush()
+        _assert_identical(engine, *_drive_reference(events))
+
+    def test_batch_ingestion_identical(self):
+        events = _random_events(21, 5000)
+        cols = np.asarray(events, dtype=np.int64)
+        engine = StatsEngine(capacity=256)  # force several mid-batch flushes
+        engine.record_batch(cols[:, 0], cols[:, 1], cols[:, 2], cols[:, 3], cols[:, 4])
+        _assert_identical(engine, *_drive_reference(events))
+
+    def test_cycle_none_always_lands(self):
+        engine, clean = StatsEngine(), CleanStatTable()
+        for s in (0, 1, 2):
+            engine.record(R, HIT, s, 1, None)
+            clean.inc_stats(R, HIT, cycle=None, stream_id=s)
+        assert engine.clean.get(R, HIT) == clean.get(R, HIT) == 3
+        assert engine.clean.lost_updates == 0
+
+    def test_fail_lane_identical(self):
+        rng = np.random.default_rng(3)
+        engine = StatsEngine(capacity=5, clean_fail_cols=8)
+        tip = StatTable()
+        clean_fail = CleanStatTable(n_outcomes=8)
+        for i in range(800):
+            t = int(rng.integers(0, T))
+            f = int(rng.integers(0, FailOutcome.count()))
+            s = int(rng.integers(0, 4))
+            cy = int(i // 3)
+            engine.record_fail(t, f, s, 1, cy)
+            tip.inc_fail_stats(t, f, s)
+            clean_fail.inc_stats(t, f, cycle=cy, stream_id=s)
+        for sid in tip.streams():
+            assert np.array_equal(engine.stream_matrix(sid, fail=True), tip.stream_matrix(sid, fail=True))
+        assert np.array_equal(engine.clean_fail.matrix(), clean_fail.matrix())
+        assert engine.clean_fail.lost_updates == clean_fail.lost_updates
+
+
+class TestStatTableApiParity:
+    """The engine answers the same calls as a StatTable (executor/tests use
+    them interchangeably)."""
+
+    def test_call_get_and_unknown_stream(self):
+        e = StatsEngine()
+        e.inc_stats(R, MISS, 1)
+        e.inc_stats(R, MISS, 1, n=4)
+        assert e(R, MISS, False, 1) == 5
+        assert e(R, MISS, False, 2) == 0
+        assert e.get(R, MISS, 1) == 5
+
+    def test_separate_stores(self):
+        e = StatsEngine()
+        e.inc_stats(R, HIT, 1)
+        e.inc_stats_pw(R, HIT, 1)
+        e.inc_fail_stats(R, FailOutcome.MSHR_ENTRY_FAIL, 1)
+        assert e.get(R, HIT, 1) == 1
+        assert int(e.stream_matrix(1, pw=True)[R, HIT]) == 1
+        assert e(R, FailOutcome.MSHR_ENTRY_FAIL, True, 1) == 1
+        e.clear_pw()
+        assert e.stream_matrix(1, pw=True).sum() == 0
+        assert e.get(R, HIT, 1) == 1  # cumulative untouched
+
+    def test_clear_resets_everything(self):
+        e = StatsEngine()
+        e.record(R, HIT, 3, 2, cycle=1)
+        e.record(W, MISS, 4, 1, cycle=1)
+        e.clear()
+        assert e.streams() == ()
+        assert e.aggregate().sum() == 0
+        assert e.clean.matrix().sum() == 0 and e.clean.lost_updates == 0
+        # §5.2 carry state must also reset: same cycle, different stream
+        # right after clear() must land (no stale last-touch).
+        e.record(R, HIT, 9, 1, cycle=1)
+        assert e.clean.get(R, HIT) == 1
+
+    def test_total_accesses_and_print(self):
+        e = StatsEngine(name="Total_core_cache_stats")
+        e.inc_stats(R, HIT, 1, n=3)
+        e.inc_stats(W, MISS, 2, n=9)
+        assert e.total_accesses() == 12
+        assert e.total_accesses(1) == 3
+        buf = io.StringIO()
+        e.print_stats(buf, 1)
+        out = buf.getvalue()
+        assert "= 3" in out and "= 9" not in out and "stream 1" in out
+
+    def test_as_stat_table_and_collector_interop(self):
+        e = StatsEngine()
+        e.inc_stats(R, HIT, 1, n=2)
+        e.inc_stats_pw(W, MISS, 9, n=6)
+        t = e.as_stat_table()
+        assert isinstance(t, StatTable)
+        assert np.array_equal(t.stream_matrix(1), e.stream_matrix(1))
+        assert np.array_equal(t.stream_matrix(9, pw=True), e.stream_matrix(9, pw=True))
+        merged = StatCollector().all_gather_and_combine(e)
+        assert merged.get(R, HIT, 1) == 2
+
+    def test_negative_cycles_rejected(self):
+        """Negative cycles would collide with the no-cycle sentinel and
+        silently skip the §5.2 emulation — they must be rejected."""
+        e = StatsEngine()
+        with pytest.raises(ValueError):
+            e.record(R, HIT, 0, 1, cycle=-1)
+        with pytest.raises(ValueError):
+            e.record_fail(R, 0, 0, 1, cycle=-2)
+        with pytest.raises(ValueError):
+            e.record_batch([R], [HIT], [0], cycles=[-2])
+        # -1 in a batch column is the documented explicit no-cycle encoding
+        e.record_batch([R], [HIT], [0], cycles=[-1])
+        assert e.clean.get(R, HIT) == 1 and e.clean.lost_updates == 0
+
+    def test_record_batch_lane_selection(self):
+        """pw=False/clean=False makes a batch equivalent to bare inc_stats."""
+        e = StatsEngine()
+        e.record_batch([R, R], [HIT, HIT], [1, 2], [3, 4], pw=False, clean=False)
+        assert e.get(R, HIT, 1) == 3 and e.get(R, HIT, 2) == 4
+        assert e.aggregate(pw=True).sum() == 0
+        assert e.clean.matrix().sum() == 0
+
+    def test_auto_flush_on_capacity(self):
+        e = StatsEngine(capacity=4)
+        for i in range(10):
+            e.inc_stats(R, HIT, 0)
+        # buffered events past capacity must have landed without explicit flush
+        assert e._pos < 4
+        assert e.get(R, HIT, 0) == 10
+
+
+class TestPaperInvariants:
+    def test_sum_tip_geq_clean(self):
+        """Σ tip ≥ clean, and the gap is exactly the lost updates (§5.2)."""
+        events = _random_events(33, 4000)
+        engine = StatsEngine(capacity=128)
+        for t, o, s, n, cy in events:
+            engine.record(t, o, s, n, cy)
+        agg = engine.aggregate().astype(np.int64)
+        clean = engine.clean.matrix().astype(np.int64)
+        assert np.all(agg >= clean)
+        assert int(agg.sum()) == int(clean.sum()) + engine.clean.lost_updates
+        assert engine.clean.lost_updates > 0  # collisions were generated
+
+    def test_single_stream_never_loses(self):
+        engine = StatsEngine()
+        for cy in (1, 1, 1, 2):
+            engine.record(R, HIT, 0, 1, cy)
+        assert engine.clean.get(R, HIT) == 4
+        assert engine.clean.lost_updates == 0
