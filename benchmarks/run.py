@@ -20,11 +20,13 @@ def main() -> None:
     ap.add_argument("--artifacts", default="artifacts/dryrun")
     args = ap.parse_args()
 
-    from . import fig2_l2lat, fig34_mixed, fig5_deepbench, serving, stats_ingest
+    from . import fig2_l2lat, fig34_mixed, fig5_deepbench, serving, sim_speed, stats_ingest
 
     results = []
     print("=== StatsEngine: batch ingestion vs per-increment seed path ===")
     results.append(("stats_ingest", stats_ingest.run()["ok"]))
+    print("\n=== Simulator core: event-driven vs cycle-stepped engine ===")
+    results.append(("sim_speed", sim_speed.run(quick=True, repeats=3)["ok"]))
     print("\n=== Fig 2: l2_lat 4-stream (tip / clean / serialized) ===")
     results.append(("fig2", fig2_l2lat.run()["ok"]))
     print("\n=== Fig 3: mixed kernels, 1 side stream ===")

@@ -478,6 +478,29 @@ class StatsEngine:
         self._clean.clear()
         self._clean_fail.clear()
 
+    def signature(self) -> dict:
+        """Full comparable snapshot of every stat view (tip cumulative,
+        per-window, failure — all per stream — plus both clean lanes and
+        their lost-update counters), as plain Python structures.  Two engines
+        fed the same event sequence must produce equal signatures; the
+        cross-engine identity suite and ``benchmarks/sim_speed.py`` assert
+        this between the cycle-stepped and event-driven simulator loops."""
+        self.flush()
+        return {
+            "streams": {
+                sid: {
+                    "cum": self.stream_matrix(sid).tolist(),
+                    "pw": self.stream_matrix(sid, pw=True).tolist(),
+                    "fail": self.stream_matrix(sid, fail=True).tolist(),
+                }
+                for sid in self.streams()
+            },
+            "clean": self._clean.matrix.tolist(),
+            "clean_lost": self._clean.lost,
+            "clean_fail": self._clean_fail.matrix.tolist(),
+            "clean_fail_lost": self._clean_fail.lost,
+        }
+
     # -- interop ---------------------------------------------------------------------
     def as_stat_table(self) -> StatTable:
         """Materialize the tip stores as a plain :class:`StatTable` (for

@@ -144,6 +144,25 @@ def _outcome_name(o: int, *, fail: bool = False) -> str:
     return f"OUT_{o}"
 
 
+# Name lookups are on the kernel-exit report path (once per cell); memoize.
+_TYPE_NAME_CACHE: Dict[int, str] = {}
+_OUTCOME_NAME_CACHE: Dict[Tuple[int, bool], str] = {}
+
+
+def _type_name_cached(t: int) -> str:
+    s = _TYPE_NAME_CACHE.get(t)
+    if s is None:
+        s = _TYPE_NAME_CACHE[t] = _type_name(t)
+    return s
+
+
+def _outcome_name_cached(o: int, fail: bool) -> str:
+    s = _OUTCOME_NAME_CACHE.get((o, fail))
+    if s is None:
+        s = _OUTCOME_NAME_CACHE[(o, fail)] = _outcome_name(o, fail=fail)
+    return s
+
+
 def format_breakdown(name: str, stream_id: int, matrix: np.ndarray, *, fail: bool = False) -> str:
     """Render one stream's ``(T, O)`` count matrix in the canonical per-kernel
     exit format (the paper's ``print_stats`` output).
@@ -154,13 +173,12 @@ def format_breakdown(name: str, stream_id: int, matrix: np.ndarray, *, fail: boo
     byte-identical by construction.
     """
     lines = [f"{name}_breakdown (stream {stream_id}):"]
-    n_rows, n_cols = matrix.shape
-    for t in range(n_rows):
-        tname = _type_name(t)
-        for o in range(n_cols):
-            v = int(matrix[t, o])
+    rows = matrix.tolist()  # one bulk conversion beats per-cell item() calls
+    for t, row in enumerate(rows):
+        tname = _type_name_cached(t)
+        for o, v in enumerate(row):
             if v:
-                lines.append(f"\t{name}[{tname}][{_outcome_name(o, fail=fail)}] = {v}")
+                lines.append(f"\t{name}[{tname}][{_outcome_name_cached(o, fail)}] = {v}")
     return "\n".join(lines) + "\n"
 
 

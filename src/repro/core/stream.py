@@ -124,32 +124,48 @@ class StreamManager:
         return w
 
     # -- scheduling (Accel-Sim main.cc launch-window loop analog) --------------
+    def _launch_candidates(self, *, serialize: bool = False, can_start: bool = True):
+        """Yield launchable kernels in selection order (lowest stream id
+        first, FIFO head only) — the one definition of launch eligibility,
+        shared by :meth:`launchable` and :meth:`next_launchable` so the two
+        engine loops can never drift in scheduling."""
+        if not can_start:
+            return
+        if serialize and self._busy_streams:
+            return  # §5.1 patch: require busy_streams.size() == 0
+        for sid in sorted(self._queues):
+            if sid in self._busy_streams:
+                continue  # stream_busy = true
+            for w in self._queues[sid]:
+                if w.done:
+                    continue
+                if w.launched:
+                    break  # head of FIFO still in flight → stream busy
+                if all(self._events[e].fired for e in w.wait_events if e in self._events):
+                    yield w
+                    if serialize:
+                        return  # at most one kernel in flight globally
+                break  # only the FIFO head is a candidate
+
     def launchable(self, *, serialize: bool = False, can_start: bool = True) -> List[WorkItem]:
         """Kernels that may start now.
 
         ``serialize=True`` reproduces the paper's §5.1 patch: additionally
         require ``busy_streams.size() == 0`` so streams run in isolation.
         """
-        if not can_start:
-            return []
-        out: List[WorkItem] = []
-        for sid in sorted(self._queues):
-            if serialize and self._busy_streams:
-                break
-            if sid in self._busy_streams:
-                continue  # stream_busy = true
-            q = self._queues[sid]
-            for w in q:
-                if w.done:
-                    continue
-                if w.launched:
-                    break  # head of FIFO still in flight → stream busy
-                if all(self._events[e].fired for e in w.wait_events if e in self._events):
-                    out.append(w)
-                break  # only the FIFO head is a candidate
-            if serialize and out:
-                break  # at most one kernel in flight globally
-        return out
+        return list(self._launch_candidates(serialize=serialize, can_start=can_start))
+
+    def next_launchable(self, *, serialize: bool = False, can_start: bool = True) -> Optional[WorkItem]:
+        """First kernel that may start now — ``launchable(...)[0]`` without
+        building the full candidate list.
+
+        The event-driven executor calls this only on cycles where the
+        candidate set can have changed (simulation start, and the cycle after
+        a kernel retires — ``mark_done`` is the sole transition that frees a
+        stream or fires an event), instead of scanning every queue every
+        cycle.
+        """
+        return next(self._launch_candidates(serialize=serialize, can_start=can_start), None)
 
     def mark_launched(self, w: WorkItem) -> None:
         w.launched = True

@@ -115,6 +115,19 @@ class KernelTimeline:
                 total += max(0, min(ea, eb) - max(sa, sb))
         return total
 
+    def state(self) -> Tuple:
+        """Canonical comparable snapshot: every kernel's (stream, uid, start,
+        end, name) — unfinished kernels included — plus the last-updated
+        markers.  Two timelines produced by different engine loops (the
+        cycle-stepped and the cycle-skipping one) must compare equal; the
+        cross-engine identity suite relies on this."""
+        rows = []
+        for sid, per in self.gpu_kernel_time.items():
+            for uid, kt in per.items():
+                rows.append((sid, uid, kt.start_cycle, kt.end_cycle, kt.name))
+        rows.sort()
+        return (tuple(rows), self.last_streamID, self.last_uid)
+
     def makespan(self) -> int:
         ivs = self.intervals()
         if not ivs:

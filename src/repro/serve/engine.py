@@ -68,7 +68,11 @@ class Request:
 class ServeConfig:
     n_slots: int = 4
     max_len: int = 256
+    #: greedy=True → argmax decoding; False → seeded categorical sampling
+    #: at ``temperature`` (deterministic for a fixed ``sample_seed``).
     greedy: bool = True
+    temperature: float = 1.0
+    sample_seed: int = 0
 
 
 class Engine:
@@ -97,6 +101,20 @@ class Engine:
             lambda p, c, t, q: decode_step(cfg, p, c, t, q), donate_argnums=(1,)
         )
         self._kv_bytes_per_token = self._estimate_kv_bytes_per_token()
+        self._rng = jax.random.PRNGKey(scfg.sample_seed)
+        self._retired: List[Request] = []
+
+    def _select_tokens(self, logits) -> np.ndarray:
+        """Next-token selection for ``(B, V)`` logits — the one place both
+        the prefill and decode paths pick tokens.  Greedy → argmax; otherwise
+        seeded categorical sampling at ``ServeConfig.temperature`` (the RNG
+        key is split per call, so runs are reproducible for a fixed
+        ``sample_seed``)."""
+        if self.scfg.greedy:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self._rng, sub = jax.random.split(self._rng)
+        temp = max(float(self.scfg.temperature), 1e-6)
+        return np.asarray(jax.random.categorical(sub, logits / temp, axis=-1), np.int32)
 
     def _estimate_kv_bytes_per_token(self) -> int:
         itemsize = jnp.dtype(self.cfg.compute_jdtype()).itemsize
@@ -130,7 +148,7 @@ class Engine:
             self.cache = jax.tree_util.tree_map(
                 lambda big, o: _write_slot(big, o, slot), self.cache, one
             )
-            nxt = int(jnp.argmax(logits[0])) if self.scfg.greedy else int(jnp.argmax(logits[0]))
+            nxt = int(self._select_tokens(logits)[0])
             plen = len(req.prompt)
             self.pos[slot] = plen
             self.last_token[slot] = nxt
@@ -158,7 +176,7 @@ class Engine:
         tokens = jnp.asarray(self.last_token)
         pos = jnp.asarray(self.pos)
         logits, self.cache = self._decode(self.params, self.cache, tokens, pos)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        nxt = self._select_tokens(logits)
         dt = time.perf_counter() - t0
         # One vectorized ingest for the whole decode batch: every active
         # slot wrote one token's KV bytes on its own stream this step.
@@ -203,15 +221,30 @@ class Engine:
             blocks=[StatBlock("Serve_stats", self.table.stream_matrix(req.stream_id))],
         )
         req.exit_report = render_text(report)
+        self._retired.append(req)
         for sink in self.sinks:
             sink.emit(report)
 
+    def drain_retired(self) -> List[Request]:
+        """Hand over (and forget) every request retired since the last drain.
+        Callers driving :meth:`step` directly use this to collect finished
+        requests; nothing is retained by the engine afterwards, so
+        long-running engines stay bounded."""
+        out = self._retired
+        self._retired = []
+        return out
+
     def run_until_idle(self, max_steps: int = 10_000) -> List[Request]:
-        done: List[Request] = []
+        """Step until queue and slots drain; returns the requests retired
+        during this call (in retirement order) and forgets them, leaving any
+        earlier un-drained retirements for :meth:`drain_retired`."""
+        mark = len(self._retired)
         steps = 0
         while (self.queue or self._active()) and steps < max_steps:
             self.step()
             steps += 1
+        done = self._retired[mark:]
+        del self._retired[mark:]
         return done
 
     # ------------------------------------------------------------------ reports

@@ -1,6 +1,20 @@
-"""Cycle-stepped executor: concurrent streams over shared TPU resources.
+"""Simulator executor: concurrent streams over shared TPU resources.
 
-This is the GPGPU-Sim analog.  It drives **three stat views in one pass**,
+This is the GPGPU-Sim analog.  Two interchangeable main loops drive it:
+
+* ``SimConfig.engine="cycle"`` — the reference cycle-stepped loop: one Python
+  iteration per simulated cycle (tick cache, scan launchables, issue, retire).
+* ``SimConfig.engine="event"`` (default) — the event-driven loop with exact
+  cycle-skipping: it computes the next *interesting* cycle (min over every
+  run's ``next_issue_cycle``, drained runs' retire cycles, and the
+  launch-stagger slot after a retire) and jumps straight to it, and collapses
+  pure synthesized-beat stretches into one vectorized batch.  It is
+  **bit-identical** to the cycle loop — same cycle counts, same per-stream /
+  clean / failure stats, same report text — because it provably visits every
+  cycle on which the cycle loop would have changed state (see
+  docs/DESIGN.md, "Event-driven scheduler").
+
+It drives **three stat views in one pass**,
 which is how we reproduce the paper's three builds from a single binary:
 
 * ``tip``   — :class:`repro.core.StatTable`, per-stream (the paper's feature);
@@ -22,6 +36,9 @@ from dataclasses import dataclass, field
 from typing import Dict, IO, List, Optional, Sequence, Tuple
 
 import io
+import re
+
+import numpy as np
 
 from repro.core.engine import CleanView, StatsEngine
 from repro.core.sinks import Report, ReportSink, StatBlock, render_text
@@ -33,6 +50,17 @@ from .kernel_desc import Access, KernelDesc, LINE_SIZE
 from .resources import Bandwidth, CacheDecision, Compute, HW_V5E, VMEMCache
 
 __all__ = ["SimConfig", "TPUSimulator", "SimResult"]
+
+# Hot-path constants (module-level lookups are cheaper than enum attribute
+# access inside the per-access inner loops).
+_GLOBAL_R = AccessType.GLOBAL_ACC_R
+_GLOBAL_W = AccessType.GLOBAL_ACC_W
+_KV_W = AccessType.KV_ACC_W
+_ICI_SND = AccessType.ICI_SND
+_ICI_RCV = AccessType.ICI_RCV
+_HIT = AccessOutcome.HIT
+_MISS = AccessOutcome.MISS
+_RESFAIL = AccessOutcome.RESERVATION_FAILURE
 
 
 @dataclass
@@ -55,7 +83,13 @@ class SimConfig:
     max_synth_beats: int = 4096  # beat granularity for aggregate-cost kernels
     #: straggler injection: stream_id -> slowdown factor (>1 = slower)
     stream_slowdown: Dict[int, float] = field(default_factory=dict)
+    #: main-loop implementation: "event" (cycle-skipping, default) or "cycle"
+    #: (reference cycle-stepped loop).  Results are bit-identical.
+    engine: str = "event"
     verbose: bool = False
+
+
+_UID_IN_LOG = re.compile(r"uid[ =:]+\d+")
 
 
 @dataclass
@@ -70,6 +104,30 @@ class SimResult:
     def tip_aggregate(self):
         return self.stats.aggregate()
 
+    def signature(self) -> dict:
+        """Everything observable about the simulation, as comparable plain
+        structures: cycles, all stat views (:meth:`StatsEngine.signature`),
+        the timeline, and the rendered log.  Kernel ``uid``s come from a
+        process-global counter, so uid digits in log text are normalized and
+        timeline rows are re-keyed by (stream, per-stream launch order) —
+        two simulations of one workload built twice still compare equal.
+        The cross-engine identity suite (``tests/test_sim_event.py``) and
+        ``benchmarks/sim_speed.py`` both compare exactly this."""
+        tl_rows, last_sid, _last_uid = self.timeline.state()
+        order: Dict[int, int] = {}
+        tl_norm = []
+        for sid, _uid, start, end, name in sorted(tl_rows, key=lambda r: (r[0], r[1])):
+            k = order.get(sid, 0)
+            order[sid] = k + 1
+            tl_norm.append((sid, k, start, end, name))
+        return {
+            "cycles": self.cycles,
+            "stats": self.stats.signature(),
+            "timeline": sorted(tl_norm),
+            "timeline_last_stream": last_sid,
+            "log": [_UID_IN_LOG.sub("uid N", line) for line in self.log],
+        }
+
 
 class _Run:
     """In-flight kernel state (one per launched KernelDesc)."""
@@ -77,6 +135,11 @@ class _Run:
     __slots__ = (
         "desc",
         "work",
+        "sid",
+        "trace",
+        "trace_len",
+        "dep",
+        "slowdown",
         "trace_pos",
         "next_issue_cycle",
         "compute_end",
@@ -86,11 +149,31 @@ class _Run:
         "syn_lines_per_beat",
         "syn_cursor",
         "issue_tokens",
+        "ff_at_np",
+        "ff_tag_np",
+        "ff_wr_np",
+        "ff_gok",
+        "ff_gtag",
+        "ff_gend",
+        "ff_g",
     )
 
-    def __init__(self, desc: KernelDesc, work: WorkItem, launch_cycle: int, compute_end: int, max_beats: int):
+    def __init__(
+        self,
+        desc: KernelDesc,
+        work: WorkItem,
+        launch_cycle: int,
+        compute_end: int,
+        max_beats: int,
+        slowdown: float = 1.0,
+    ):
         self.desc = desc
         self.work = work
+        self.sid = work.stream_id
+        self.trace = desc.trace
+        self.trace_len = len(desc.trace) if desc.trace is not None else 0
+        self.dep = desc.dependent
+        self.slowdown = slowdown
         self.trace_pos = 0
         self.next_issue_cycle = launch_cycle
         self.compute_end = compute_end
@@ -100,10 +183,94 @@ class _Run:
         self.syn_rd, self.syn_wr, self.syn_ici = rd, wr, ici
         self.syn_cursor = desc.addr_base
         self.issue_tokens = 0.0
+        self.ff_gend: Optional[List[int]] = None  # built lazily by _build_ff
+
+    def _build_ff(self, line_size: int) -> None:
+        """Precompute columns for dependent hit-chain batching: per-access
+        type / line tag / is-write arrays (sliced verbatim into the emitted
+        batch), plus run-length *groups* of consecutive accesses sharing one
+        tag and eligibility (single-line, non-ICI), so chain scanning costs
+        one residency lookup per touched line instead of one per access.
+        Built once per descriptor (cached on the KernelDesc), on the first
+        fast-forward attempt."""
+        cached = self.desc.ff_cache
+        if cached is not None and cached[0] == line_size:
+            (_, self.ff_at_np, self.ff_tag_np, self.ff_wr_np,
+             self.ff_gok, self.ff_gtag, self.ff_gend) = cached
+            self.ff_g = 0
+            return
+        trace = self.trace or []
+        n = len(trace)
+        at_np = np.array([a.atype for a in trace], dtype=np.int64)
+        addr_np = np.array([a.addr for a in trace], dtype=np.int64)
+        size_np = np.array([a.size for a in trace], dtype=np.int64)
+        tag_np = addr_np // line_size
+        hi_np = (addr_np + np.maximum(size_np, 1) - 1) // line_size
+        ok_np = (tag_np == hi_np) & (at_np != int(_ICI_SND)) & (at_np != int(_ICI_RCV))
+        self.ff_at_np = at_np
+        self.ff_tag_np = tag_np
+        self.ff_wr_np = (at_np == int(_GLOBAL_W)) | (at_np == int(_KV_W))
+        change = np.empty(n, dtype=bool)
+        if n:
+            change[0] = True
+            change[1:] = (tag_np[1:] != tag_np[:-1]) | (ok_np[1:] != ok_np[:-1])
+        starts = np.flatnonzero(change)
+        self.ff_gok = ok_np[starts].tolist()
+        self.ff_gtag = tag_np[starts].tolist()
+        self.ff_gend = np.append(starts[1:], n).tolist()
+        self.ff_g = 0
+        self.desc.ff_cache = (
+            line_size, self.ff_at_np, self.ff_tag_np, self.ff_wr_np,
+            self.ff_gok, self.ff_gtag, self.ff_gend,
+        )
 
     def drained(self) -> bool:
-        trace_done = self.desc.trace is None or self.trace_pos >= len(self.desc.trace)
-        return trace_done and self.syn_rd == 0 and self.syn_wr == 0 and self.syn_ici == 0
+        return (
+            self.trace_pos >= self.trace_len
+            and self.syn_rd == 0
+            and self.syn_wr == 0
+            and self.syn_ici == 0
+        )
+
+
+def _occupy_sequence(bw: Bandwidth, cycles: np.ndarray, nbytes: np.ndarray, wr_mask) -> None:
+    """Apply a sequence of ``bw.occupy(nbytes[i], cycles[i])`` calls with
+    **bit-identical** float arithmetic to the scalar loop.
+
+    The next-free pointer evolves as ``nf = max(cycle, nf) + nbytes/bpc``.
+    The head is replayed scalar-by-scalar while an issue cycle can still bind
+    the ``max``; once ``nf`` passes the window's last cycle, the remaining
+    updates are pure left-to-right additions, which ``np.add.accumulate``
+    performs in the same order (ufunc accumulation is strictly sequential, so
+    the result is the same IEEE-754 double at every step).
+    """
+    total = int(nbytes.sum())
+    bw.total_bytes += total
+    if wr_mask is None:
+        bw.total_rd_bytes += total
+    else:
+        wr_total = int(nbytes[wr_mask].sum())
+        bw.total_wr_bytes += wr_total
+        bw.total_rd_bytes += total - wr_total
+    nf = bw.next_free_cycle
+    bpc = bw.bytes_per_cycle
+    cl = cycles.tolist()
+    bl = nbytes.tolist()
+    n = len(cl)
+    last_c = cl[-1]
+    i = 0
+    while i < n and nf < last_c:
+        c = cl[i]
+        start = c if c > nf else nf
+        nf = start + bl[i] / bpc
+        i += 1
+    if i < n:
+        # tail: max() can no longer bind (cycles are non-decreasing ≤ nf)
+        durs = np.empty(n - i + 1, dtype=np.float64)
+        durs[0] = nf
+        np.divide(nbytes[i:], bpc, out=durs[1:])
+        nf = float(np.add.accumulate(durs)[-1])
+    bw.next_free_cycle = nf
 
 
 class TPUSimulator:
@@ -141,6 +308,7 @@ class TPUSimulator:
         )
         self.log: List[str] = []
         self._active: List[_Run] = []
+        self._n_synth = 0  # active runs without an explicit trace (FF-eligible)
         self._cycle = 0
 
     # -- stream/launch API (mirrors cuda<<<>>> + events) -------------------------
@@ -169,6 +337,45 @@ class TPUSimulator:
 
     # -- main loop -------------------------------------------------------------------
     def run(self) -> SimResult:
+        if self.cfg.engine == "cycle":
+            self._run_cycle()
+        elif self.cfg.engine == "event":
+            self._run_event()
+        else:
+            raise ValueError(f"unknown SimConfig.engine {self.cfg.engine!r} (want 'cycle' or 'event')")
+        return SimResult(
+            cycles=self._cycle,
+            stats=self.stats,
+            clean=self.clean,
+            clean_fail=self.clean_fail,
+            timeline=self.timeline,
+            log=self.log,
+        )
+
+    def _launch(self, w: WorkItem, cycle: int) -> _Run:
+        """Start one queued kernel (shared by both engine loops)."""
+        cfg = self.cfg
+        desc: KernelDesc = w.payload  # type: ignore[assignment]
+        self.streams.mark_launched(w)
+        n_sharers = len(self._active) + 1
+        compute_end = cycle + self.compute.cycles_for(desc.flops, n_sharers)
+        run = _Run(
+            desc,
+            w,
+            cycle,
+            compute_end,
+            cfg.max_synth_beats,
+            cfg.stream_slowdown.get(w.stream_id, 1.0),
+        )
+        self._active.append(run)
+        if run.trace is None:
+            self._n_synth += 1
+        self.timeline.on_launch(w.stream_id, desc.uid, cycle, desc.name)
+        self._emit(f"launching kernel name: {desc.name} uid: {desc.uid} stream: {w.stream_id}")
+        return run
+
+    def _run_cycle(self) -> None:
+        """Reference loop: one Python iteration per simulated cycle."""
         cfg = self.cfg
         serialize = cfg.serialize_streams or not cfg.concurrent_streams
         while self.streams.pending() > 0:
@@ -182,14 +389,7 @@ class TPUSimulator:
             # latency-bound benchmark free of same-cycle stat collisions).
             cands = self.streams.launchable(serialize=serialize)
             if cands:
-                w = cands[0]
-                desc: KernelDesc = w.payload  # type: ignore[assignment]
-                self.streams.mark_launched(w)
-                n_sharers = len(self._active) + 1
-                compute_end = cycle + self.compute.cycles_for(desc.flops, n_sharers)
-                self._active.append(_Run(desc, w, cycle, compute_end, cfg.max_synth_beats))
-                self.timeline.on_launch(w.stream_id, desc.uid, cycle, desc.name)
-                self._emit(f"launching kernel name: {desc.name} uid: {desc.uid} stream: {w.stream_id}")
+                self._launch(cands[0], cycle)
 
             # Issue memory accesses for every active kernel (uid order — the
             # deterministic analog of GPGPU-Sim's core iteration order).
@@ -202,29 +402,118 @@ class TPUSimulator:
                     self._retire(run, cycle)
 
             self._cycle += 1
-        return SimResult(
-            cycles=self._cycle,
-            stats=self.stats,
-            clean=self.clean,
-            clean_fail=self.clean_fail,
-            timeline=self.timeline,
-            log=self.log,
-        )
+
+    def _run_event(self) -> None:
+        """Event-driven loop with exact cycle-skipping.
+
+        Invariant: every cycle on which the cycle-stepped loop would change
+        any state is visited, and visited cycles run the exact per-cycle
+        body.  A cycle can only be interesting if (a) an MSHR fetch comes due
+        — handled lazily, installs land at their own ready cycles; (b) a
+        kernel is launchable — only at start and the cycle after a retire
+        (``mark_done`` is the sole transition that frees a stream / fires an
+        event), tracked by ``launch_ready``; (c) some run issues — at
+        ``next_issue_cycle``, and every subsequent cycle while it still has
+        work (degrading to per-cycle stepping exactly where the reference
+        loop does per-cycle work); or (d) a drained run retires — at
+        ``max(compute_end, next_issue_cycle)``.  The next visited cycle is
+        the min over (b)-(d); pure synthesized-beat stretches are additionally
+        collapsed by :meth:`_fast_forward`.
+        """
+        cfg = self.cfg
+        serialize = cfg.serialize_streams or not cfg.concurrent_streams
+        streams = self.streams
+        active = self._active
+        cache = self.cache
+        heap = cache._mshr_heap
+        max_cycles = cfg.max_cycles
+        if streams.pending() == 0:
+            return
+        launch_ready = True
+        cycle = self._cycle
+        while True:
+            if cycle >= max_cycles:
+                self._cycle = cycle
+                raise RuntimeError(f"simulation exceeded max_cycles={cfg.max_cycles}")
+            if heap and heap[0][0] <= cycle:
+                cache.tick(cycle)
+
+            if launch_ready:
+                w = streams.next_launchable(serialize=serialize)
+                if w is None:
+                    launch_ready = False
+                else:
+                    self._launch(w, cycle)
+
+            # Collapse deterministic stretches into one vectorized batch:
+            # pure synthesized-beat windows, or dependent hit-chain windows.
+            if active and not launch_ready:
+                n_synth = self._n_synth
+                if n_synth == len(active):
+                    nxt = self._fast_forward(cycle)
+                    if nxt > cycle:
+                        cycle = nxt if nxt < max_cycles else max_cycles
+                        continue
+                elif n_synth == 0:
+                    nxt = self._fast_forward_dep(cycle)
+                    if nxt > cycle:
+                        cycle = nxt if nxt < max_cycles else max_cycles
+                        continue
+
+            for run in active:
+                if run.next_issue_cycle <= cycle:
+                    self._issue_event(run, cycle)
+
+            # ---- retire + next interesting cycle, one pass
+            to_retire = None
+            nxt = cycle + 1 if launch_ready else max_cycles
+            for run in active:
+                t = run.next_issue_cycle
+                if (
+                    run.trace_pos >= run.trace_len
+                    and run.syn_rd == 0
+                    and run.syn_wr == 0
+                    and run.syn_ici == 0
+                ):
+                    if run.compute_end > t:
+                        t = run.compute_end  # drained: wake at retire time
+                    if t <= cycle:  # retire condition met this cycle
+                        if to_retire is None:
+                            to_retire = [run]
+                        else:
+                            to_retire.append(run)
+                        continue
+                elif t <= cycle:
+                    t = cycle + 1
+                if t < nxt:
+                    nxt = t
+            if to_retire is not None:
+                for run in to_retire:
+                    self._retire(run, cycle)
+                if streams.pending() == 0:
+                    self._cycle = cycle + 1
+                    return
+                launch_ready = True
+                if cycle + 1 < nxt:
+                    nxt = cycle + 1
+            cycle = nxt
 
     # -- access issue ------------------------------------------------------------------
     def _issue(self, run: _Run, cycle: int) -> None:
-        cfg = self.cfg
-        sid = run.work.stream_id
+        """Reference per-cycle issue (cycle engine)."""
         if cycle < run.next_issue_cycle:
             return
 
         # Straggler injection: a slowed stream accrues fractional issue tokens.
-        slowdown = cfg.stream_slowdown.get(sid, 1.0)
-        run.issue_tokens += 1.0 / slowdown
+        run.issue_tokens += 1.0 / run.slowdown
         if run.issue_tokens < 1.0:
             return
         run.issue_tokens -= 1.0
+        self._issue_body(run, cycle)
 
+    def _issue_body(self, run: _Run, cycle: int) -> None:
+        cfg = self.cfg
+        sid = run.sid
         budget = 1 if run.desc.dependent else run.desc.issue_width
         while budget > 0:
             acc = self._next_access(run)
@@ -235,7 +524,13 @@ class TPUSimulator:
                 # Collectives bypass VMEM; they occupy ICI link bandwidth.
                 self.ici.occupy(n_lines * cfg.line_size, cycle)
                 self._count(access.atype, AccessOutcome.MISS, sid, cycle, n_lines)
-                self._advance(run, access, n_lines)
+                if run.desc.trace is not None and run.trace_pos < len(run.desc.trace):
+                    # ICI access from an explicit trace: consume the trace
+                    # entry (the seed only decremented synth counters here,
+                    # livelocking any trace that contained an ICI access).
+                    run.trace_pos += 1
+                else:
+                    self._advance(run, access, n_lines)
                 budget -= 1
                 continue
 
@@ -247,12 +542,354 @@ class TPUSimulator:
                 budget -= 1
             else:
                 # Synthesized streaming beats bypass residency (.cg analog):
-                # straight HBM traffic, classified MISS.
+                # straight HBM traffic, classified MISS.  Writes share the
+                # half-duplex HBM bucket with reads; the distinction is kept
+                # for byte attribution (Bandwidth.total_wr_bytes).
                 is_wr = access.atype in (AccessType.GLOBAL_ACC_W, AccessType.KV_ACC_W)
-                self.hbm.occupy(n_lines * cfg.line_size, cycle)
+                self.hbm.occupy(n_lines * cfg.line_size, cycle, is_write=is_wr)
                 self._count(access.atype, AccessOutcome.MISS, sid, cycle, n_lines)
                 self._advance(run, access, n_lines)
                 budget -= 1
+
+    def _issue_event(self, run: _Run, cycle: int) -> None:
+        """Event-engine issue: semantically identical to :meth:`_issue` for
+        ``cycle >= run.next_issue_cycle`` (the caller guarantees the guard),
+        with the §5.1 hot path — one dependent VMEM trace access — inlined.
+        """
+        if run.slowdown != 1.0:
+            run.issue_tokens += 1.0 / run.slowdown
+            if run.issue_tokens < 1.0:
+                return
+            run.issue_tokens -= 1.0
+
+        tp = run.trace_pos
+        if run.dep and tp < run.trace_len:
+            access = run.trace[tp]
+            at = access.atype
+            if at != _ICI_SND and at != _ICI_RCV:
+                cfg = self.cfg
+                ls = cfg.line_size
+                addr = access.addr
+                size = access.size
+                lo = addr // ls
+                hi = (addr + (size if size > 1 else 1) - 1) // ls
+                is_wr = at == _GLOBAL_W or at == _KV_W
+                sid = run.sid
+                engine = self.engine
+                cache_access = self.cache.access_line
+                if lo == hi:
+                    decision = cache_access(lo, is_wr, cycle, sid)
+                    outcome = decision.outcome
+                    if outcome == _RESFAIL:
+                        engine.record_fail(at, decision.fail_reason, sid, 1, cycle)
+                        return
+                    engine.record(at, outcome, sid, 1, cycle)
+                else:
+                    decision = None
+                    for tag in range(lo, hi + 1):
+                        decision = cache_access(tag, is_wr, cycle, sid)
+                        outcome = decision.outcome
+                        if outcome == _RESFAIL:
+                            engine.record_fail(at, decision.fail_reason, sid, 1, cycle)
+                            return
+                        engine.record(at, outcome, sid, 1, cycle)
+                run.trace_pos = tp + 1
+                if decision.outcome == _HIT:
+                    wait = cfg.vmem_hit_latency
+                else:
+                    wait = decision.ready_cycle - cycle
+                    if wait < 1:
+                        wait = 1
+                if run.slowdown != 1.0:
+                    run.next_issue_cycle = cycle + int(wait * run.slowdown)
+                else:
+                    run.next_issue_cycle = cycle + wait
+                return
+
+        self._issue_body(run, cycle)
+
+    # -- synthesized-beat fast-forward ------------------------------------------------
+    def _fast_forward(self, cycle: int) -> int:
+        """Batch-issue pure synthesized-beat cycles; returns the new cycle.
+
+        Preconditions (checked here; any miss returns ``cycle`` unchanged and
+        the caller falls back to per-cycle stepping): every active run is
+        trace-free, un-slowed, with no fractional issue tokens and no future
+        ``next_issue_cycle``; no kernel is launchable (caller guarantees);
+        and no MSHR fetch comes due inside the window.  Under those
+        conditions the per-cycle reference loop is fully determined:
+        each run issues ``issue_width`` (or 1 if dependent) beats per cycle
+        in active-list order, each beat occupying HBM/ICI and recording one
+        MISS event.  The window ends one cycle before the earliest retire
+        (``E``); beats for ``[cycle, E-1]`` are emitted in exactly the
+        reference order (cycle-major, then active-list order), bandwidth
+        pointers advanced with bit-identical float arithmetic, and stats
+        landed through one ``record_batch``.  Cycle ``E`` itself is processed
+        by the normal loop body (remaining beats, then the retire).
+        """
+        cfg = self.cfg
+        active = self._active
+        E = cfg.max_cycles
+        for run in active:
+            if run.slowdown != 1.0 or run.issue_tokens != 0.0:
+                return cycle
+            rd, wr, ici = run.syn_rd, run.syn_wr, run.syn_ici
+            if rd or wr or ici:
+                if run.next_issue_cycle > cycle:
+                    return cycle
+                b = run.syn_lines_per_beat
+                beats = (rd + b - 1) // b + (wr + b - 1) // b + (ici + b - 1) // b
+                budget = 1 if run.dep else run.desc.issue_width
+                t = cycle + (beats + budget - 1) // budget - 1  # drain cycle
+                if run.compute_end > t:
+                    t = run.compute_end
+            else:
+                t = run.compute_end
+                if run.next_issue_cycle > t:
+                    t = run.next_issue_cycle
+                if t < cycle:
+                    t = cycle
+            if t < E:
+                E = t
+        rc = self.cache.earliest_ready()
+        if rc is not None and rc < E:
+            E = rc  # never emit past a pending MSHR install
+        if E <= cycle:
+            return cycle
+
+        K = E - cycle
+        ls = cfg.line_size
+        col_t: List[np.ndarray] = []
+        col_n: List[np.ndarray] = []
+        col_c: List[np.ndarray] = []
+        col_s: List[np.ndarray] = []
+        col_r: List[np.ndarray] = []
+        for pos, run in enumerate(active):
+            rd, wr, ici = run.syn_rd, run.syn_wr, run.syn_ici
+            if not (rd or wr or ici):
+                continue
+            b = run.syn_lines_per_beat
+            budget = 1 if run.dep else run.desc.issue_width
+            parts_t: List[np.ndarray] = []
+            parts_n: List[np.ndarray] = []
+            for rem, at in ((rd, _GLOBAL_R), (wr, _GLOBAL_W), (ici, _ICI_SND)):
+                if rem <= 0:
+                    continue
+                nph = (rem + b - 1) // b
+                sizes = np.full(nph, b, dtype=np.int64)
+                sizes[-1] = rem - (nph - 1) * b
+                parts_n.append(sizes)
+                parts_t.append(np.full(nph, int(at), dtype=np.int64))
+            sizes = np.concatenate(parts_n)
+            types = np.concatenate(parts_t)
+            nb = min(len(sizes), K * budget)
+            sizes = sizes[:nb]
+            types = types[:nb]
+            # consume in rd → wr → ici order, exactly like _advance
+            t_rd = int(sizes[types == int(_GLOBAL_R)].sum())
+            t_wr = int(sizes[types == int(_GLOBAL_W)].sum())
+            t_ici = int(sizes[types == int(_ICI_SND)].sum())
+            run.syn_rd -= t_rd
+            run.syn_wr -= t_wr
+            run.syn_ici -= t_ici
+            run.syn_cursor += (t_rd + t_wr + t_ici) * ls
+            col_t.append(types)
+            col_n.append(sizes)
+            col_c.append(cycle + np.arange(nb, dtype=np.int64) // budget)
+            col_s.append(np.full(nb, run.sid, dtype=np.int64))
+            col_r.append(np.full(nb, pos, dtype=np.int64))
+        if not col_t:
+            return E  # nothing issues in the window (all drained, waiting on compute)
+
+        types = np.concatenate(col_t)
+        sizes = np.concatenate(col_n)
+        cycles = np.concatenate(col_c)
+        sids = np.concatenate(col_s)
+        rpos = np.concatenate(col_r)
+        order = np.lexsort((rpos, cycles))  # stable: cycle-major, active order
+        types = types[order]
+        sizes = sizes[order]
+        cycles = cycles[order]
+        sids = sids[order]
+
+        is_ici = types == int(_ICI_SND)
+        if is_ici.any():
+            _occupy_sequence(self.ici, cycles[is_ici], sizes[is_ici] * ls, None)
+        hbm_sel = ~is_ici
+        if hbm_sel.any():
+            _occupy_sequence(
+                self.hbm,
+                cycles[hbm_sel],
+                sizes[hbm_sel] * ls,
+                types[hbm_sel] == int(_GLOBAL_W),
+            )
+        self.engine.record_batch(
+            types,
+            np.full(len(types), int(_MISS), dtype=np.int64),
+            sids,
+            counts=sizes.astype(np.uint64),
+            cycles=cycles,
+        )
+        return E
+
+    #: max chain accesses scanned per run per fast-forward window
+    _DEP_FF_CAP = 1 << 15
+
+    def _fast_forward_dep(self, cycle: int) -> int:
+        """Batch dependent hit-chain cycles; returns the new cycle.
+
+        While every active run is a dependent trace kernel whose next
+        accesses HIT resident lines, the reference loop is fully determined:
+        each run issues one access per ``vmem_hit_latency`` stride, each a
+        HIT that only touches LRU recency (residency never shrinks inside
+        the window — hits install nothing, and the window ends before any
+        MSHR promotion).  The window ends at the earliest non-hit access,
+        issue wake-up of a stalled run, retire, or promotion; events before
+        that are emitted in reference order (cycle-major, then active-list
+        order) through one ``record_batch``, and the LRU effect is replayed
+        exactly by moving each touched line in final-touch order.
+        """
+        cfg = self.cfg
+        cache = self.cache
+        lines = cache._lines
+        active = self._active
+        hl = cfg.vmem_hit_latency
+        stride = hl if hl >= 1 else 1
+        E = cfg.max_cycles
+        scanners = None
+        for pos, run in enumerate(active):
+            if run.slowdown != 1.0 or run.issue_tokens != 0.0:
+                return cycle
+            tp = run.trace_pos
+            if tp >= run.trace_len:
+                if run.syn_rd or run.syn_wr or run.syn_ici:
+                    return cycle  # trace done but synth beats remain — bail
+                t = run.compute_end
+                if run.next_issue_cycle > t:
+                    t = run.next_issue_cycle
+                if t < cycle:
+                    t = cycle
+                if t < E:
+                    E = t  # drained: retires at t
+                continue
+            if not run.dep:
+                return cycle
+            if run.ff_gend is None:
+                run._build_ff(cfg.line_size)
+            g_end = run.ff_gend
+            g = run.ff_g
+            while g_end[g] <= tp:
+                g += 1  # resync the group cursor (trace_pos moved elsewhere)
+            run.ff_g = g
+            nic = run.next_issue_cycle
+            start = nic if nic > cycle else cycle
+            if not run.ff_gok[g] or run.ff_gtag[g] not in lines:
+                # next access is not a chain hit (residency is constant
+                # inside the window, so this holds at `start` too)
+                if start <= cycle:
+                    return cycle  # it issues right now — no window
+                if start < E:
+                    E = start
+                continue
+            if scanners is None:
+                scanners = [(pos, run, start)]
+            else:
+                scanners.append((pos, run, start))
+        rc = cache.earliest_ready()
+        if rc is not None and rc < E:
+            E = rc  # promotions mutate residency/LRU — end the window first
+        if E <= cycle or scanners is None:
+            return cycle
+
+        chains = []
+        for pos, run, start in scanners:
+            g_ok = run.ff_gok
+            g_tag = run.ff_gtag
+            g_end = run.ff_gend
+            ng = len(g_end)
+            tp = run.trace_pos
+            tl = run.trace_len
+            cap = tp + self._DEP_FF_CAP
+            g = run.ff_g
+            j = tp
+            # scan whole groups: one residency lookup per touched line
+            while g < ng and g_ok[g] and g_tag[g] in lines:
+                j = g_end[g]
+                g += 1
+                if j >= cap or start + (j - tp) * stride >= E:
+                    break
+            if j == tl and not (run.syn_rd or run.syn_wr or run.syn_ici):
+                # chain drains the whole trace → the next event is the retire
+                t = run.compute_end
+                last_nic = start + (j - tp - 1) * stride + hl
+                if last_nic > t:
+                    t = last_nic
+                if t < E:
+                    E = t
+            else:
+                c = start + (j - tp) * stride  # first non-hit access (or cap)
+                if c < E:
+                    E = c
+            chains.append((pos, run, tp, j, start))
+        if E <= cycle:
+            return cycle
+
+        # cut each chain at the final window end and emit
+        col_at: List[np.ndarray] = []
+        col_tag: List[np.ndarray] = []
+        col_wr: List[np.ndarray] = []
+        col_c: List[np.ndarray] = []
+        col_s: List[np.ndarray] = []
+        col_r: List[np.ndarray] = []
+        for pos, run, tp, jmax, start in chains:
+            if start > E - 1:
+                continue  # wakes after the window closes — untouched
+            kept = jmax - tp
+            kcut = (E - 1 - start) // stride + 1
+            if kept > kcut:
+                kept = kcut
+            j2 = tp + kept
+            col_at.append(run.ff_at_np[tp:j2])
+            col_tag.append(run.ff_tag_np[tp:j2])
+            col_wr.append(run.ff_wr_np[tp:j2])
+            col_c.append(start + stride * np.arange(kept, dtype=np.int64))
+            col_s.append(np.full(kept, run.sid, dtype=np.int64))
+            col_r.append(np.full(kept, pos, dtype=np.int64))
+            run.trace_pos = j2
+            run.next_issue_cycle = start + (kept - 1) * stride + hl
+        if not col_at:
+            return E  # every chain wakes at/after E — pure jump
+        at_m = np.concatenate(col_at)
+        tag_m = np.concatenate(col_tag)
+        wr_m = np.concatenate(col_wr)
+        c_m = np.concatenate(col_c)
+        s_m = np.concatenate(col_s)
+        r_m = np.concatenate(col_r)
+        order = np.lexsort((r_m, c_m))  # stable: cycle-major, active order
+        at_m = at_m[order]
+        tag_m = tag_m[order]
+        wr_m = wr_m[order]
+        c_m = c_m[order]
+        s_m = s_m[order]
+
+        self.engine.record_batch(
+            at_m, np.full(len(at_m), int(_HIT), dtype=np.int64), s_m, cycles=c_m
+        )
+        # Replay the LRU effect: each touched line ends with last_use = its
+        # final touch cycle, and touched lines move behind untouched ones in
+        # final-touch order — identical to per-touch move_to_end.
+        m = len(tag_m)
+        u, first_rev = np.unique(tag_m[::-1], return_index=True)
+        last_idx = m - 1 - first_rev
+        apply_order = np.argsort(last_idx)
+        for tg, lc in zip(u[apply_order].tolist(), c_m[last_idx[apply_order]].tolist()):
+            ln = lines[tg]
+            ln.last_use = lc
+            lines.move_to_end(tg)
+        if wr_m.any():
+            for tg in np.unique(tag_m[wr_m]).tolist():
+                lines[tg].dirty = True
+        return E
 
     def _trace_access(self, run: _Run, access: Access, cycle: int, sid: int) -> Optional[CacheDecision]:
         cfg = self.cfg
@@ -313,6 +950,8 @@ class TPUSimulator:
     # -- retire ------------------------------------------------------------------------
     def _retire(self, run: _Run, cycle: int) -> None:
         self._active.remove(run)
+        if run.trace is None:
+            self._n_synth -= 1
         self.streams.mark_done(run.work)
         self.timeline.on_done(run.work.stream_id, run.desc.uid, cycle)
         sid = run.work.stream_id

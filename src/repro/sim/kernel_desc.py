@@ -69,6 +69,10 @@ class KernelDesc:
     dependent: bool = False
     issue_width: int = 4  # accesses issued per cycle (independent-access kernels)
     uid: int = field(default_factory=lambda: next(_uid_counter))
+    #: derived per-access columns for the event engine's hit-chain batching,
+    #: cached here so repeated simulations of one descriptor skip the trace
+    #: walk (keyed by line size; invalid if ``trace`` is mutated after use).
+    ff_cache: Optional[Tuple] = field(default=None, repr=False, compare=False)
 
     def total_trace_accesses(self) -> int:
         return len(self.trace) if self.trace else 0

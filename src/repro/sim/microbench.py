@@ -53,6 +53,7 @@ def l2_lat_multistream(
     serialize: bool = False,
     concurrent: bool = True,
     config: Optional[SimConfig] = None,
+    engine: Optional[str] = None,
 ) -> SimResult:
     """``l2_lat.cu`` modified for N concurrent streams (paper §5.1).
 
@@ -63,6 +64,8 @@ def l2_lat_multistream(
     cfg = config or SimConfig()
     cfg.serialize_streams = serialize
     cfg.concurrent_streams = concurrent
+    if engine is not None:
+        cfg.engine = engine
     sim = TPUSimulator(cfg)
     base = 1 << 20  # posArray_g
     streams = [sim.create_stream(f"stream_{i+1}") for i in range(n_streams)]
@@ -137,6 +140,7 @@ def mixed_stream_workload(
     n: int = 1 << 18,
     serialize: bool = False,
     config: Optional[SimConfig] = None,
+    engine: Optional[str] = None,
 ) -> SimResult:
     """benchmark_1_stream.cu (n_streams=1 extra stream) / benchmark_3_stream.cu
     (n_streams=3) from §5.2.
@@ -150,6 +154,8 @@ def mixed_stream_workload(
     """
     cfg = config or SimConfig()
     cfg.serialize_streams = serialize
+    if engine is not None:
+        cfg.engine = engine
     sim = TPUSimulator(cfg)
     shapes = _MixedShapes(n)
     mb = shapes.vec_bytes + (1 << 12)  # distinct arrays, page-aligned-ish
@@ -176,6 +182,7 @@ def deepbench_like_workload(
     *,
     serialize: bool = False,
     config: Optional[SimConfig] = None,
+    engine: Optional[str] = None,
 ) -> SimResult:
     """DeepBench ``inference_half_35_1500_2560`` analog (§5.3).
 
@@ -186,6 +193,8 @@ def deepbench_like_workload(
     """
     cfg = config or SimConfig()
     cfg.serialize_streams = serialize
+    if engine is not None:
+        cfg.engine = engine
     sim = TPUSimulator(cfg)
     if kernels is None:
         m, n, k = 35, 1500, 2560

@@ -15,6 +15,9 @@ The classification outcomes intentionally mirror Accel-Sim's
 
 from __future__ import annotations
 
+import heapq
+import itertools
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -58,20 +61,39 @@ class CacheDecision:
     ready_cycle: int = 0  # cycle at which the line becomes resident (MISS/HIT_RESERVED)
 
 
+# Outcome-only decisions carry no per-access state, so the hot path returns
+# shared singletons instead of allocating a frozen dataclass per access.
+_HIT = CacheDecision(AccessOutcome.HIT)
+_FAIL_MSHR_MERGE = CacheDecision(AccessOutcome.RESERVATION_FAILURE, FailOutcome.MSHR_MERGE_FAIL)
+_FAIL_MSHR_ENTRY = CacheDecision(AccessOutcome.RESERVATION_FAILURE, FailOutcome.MSHR_ENTRY_FAIL)
+_FAIL_BANDWIDTH = CacheDecision(AccessOutcome.RESERVATION_FAILURE, FailOutcome.BANDWIDTH_FAIL)
+
+
 class Bandwidth:
-    """Bytes/cycle token bucket with a rolling next-free-cycle pointer."""
+    """Bytes/cycle token bucket with a rolling next-free-cycle pointer.
+
+    HBM is modeled half-duplex: reads and writes drain the same token bucket
+    (``next_free_cycle``), but the byte totals are attributed separately so
+    read/write mixes stay observable (``total_rd_bytes`` / ``total_wr_bytes``).
+    """
 
     def __init__(self, bytes_per_cycle: float) -> None:
         self.bytes_per_cycle = float(bytes_per_cycle)
         self.next_free_cycle = 0.0
         self.total_bytes = 0
+        self.total_rd_bytes = 0
+        self.total_wr_bytes = 0
 
-    def occupy(self, n_bytes: int, cycle: int) -> int:
+    def occupy(self, n_bytes: int, cycle: int, is_write: bool = False) -> int:
         """Schedule a transfer; returns the cycle it completes."""
         start = max(float(cycle), self.next_free_cycle)
         dur = n_bytes / self.bytes_per_cycle
         self.next_free_cycle = start + dur
         self.total_bytes += n_bytes
+        if is_write:
+            self.total_wr_bytes += n_bytes
+        else:
+            self.total_rd_bytes += n_bytes
         return int(self.next_free_cycle) + 1
 
     def saturated(self, cycle: int, horizon: int) -> bool:
@@ -115,6 +137,22 @@ class VMEMCache:
     * merge list full               → RESERVATION_FAILURE / MSHR_MERGE_FAIL
     * HBM queue too deep            → RESERVATION_FAILURE / BANDWIDTH_FAIL
     * otherwise                     → MISS, fetch scheduled on HBM
+
+    Event-driven-friendly internals:
+
+    * Residency is an :class:`~collections.OrderedDict` in LRU order
+      (move-to-end on touch), so eviction is O(1) instead of a
+      ``min()``-over-all-lines scan.  Tie-breaking among lines last touched
+      in the same cycle follows touch order rather than the old scan's
+      insertion order; the two only diverge when equal ``last_use`` values
+      meet an eviction, and both engine paths share this implementation.
+    * In-flight fetches additionally sit in a min-heap keyed by
+      ``(ready_cycle, allocation_seq)``.  :meth:`tick` pops due entries in
+      that order and installs each at **its own** ready cycle, which makes
+      the call idempotent and safe to defer: a cycle-skipping caller that
+      ticks once at cycle ``c`` performs exactly the installs (and dirty
+      writebacks, at the same cycles) that a caller ticking every cycle up
+      to ``c`` would have performed.
     """
 
     def __init__(
@@ -134,46 +172,78 @@ class VMEMCache:
         self.mshr_entries = int(mshr_entries)
         self.mshr_max_merge = int(mshr_max_merge)
         self.bw_stall_horizon = int(bw_stall_horizon)
-        self._lines: Dict[int, _Line] = {}  # tag -> line
+        self._lines: "OrderedDict[int, _Line]" = OrderedDict()  # tag -> line, LRU order
         #: tag -> (ready_cycle, merge list in arrival order).  Responses drain
         #: to merged consumers on consecutive cycles (position in the list),
         #: which also desynchronizes previously-merged streams — matching the
         #: paper's §5.1 observation that clean == Σ tip for l2_lat (no
         #: same-cycle stat collisions once streams are staggered).
         self._mshr: Dict[int, Tuple[int, List[int]]] = {}
+        #: (ready_cycle, allocation_seq, tag) — lazy-deletion min-heap over
+        #: the in-flight fetches; stale entries (flushed, or superseded by a
+        #: later re-fetch of the same tag) are skipped on pop.
+        self._mshr_heap: List[Tuple[int, int, int]] = []
+        self._mshr_seq = itertools.count()
         self._writebacks = 0
 
     # -- per-cycle maintenance ---------------------------------------------------
     def tick(self, cycle: int) -> None:
-        """Promote completed fetches to residency (called once per cycle)."""
-        ready = [tag for tag, (rc, _) in self._mshr.items() if rc <= cycle]
-        for tag in ready:
-            del self._mshr[tag]
-            self._install(tag, dirty=False, cycle=cycle)
+        """Promote every fetch due by ``cycle`` to residency.
+
+        Due entries are processed in ``(ready_cycle, allocation order)`` —
+        the same order a per-cycle caller would observe — and each install
+        happens at the entry's own ready cycle, so deferred calls are
+        state-identical to per-cycle calls (see class docstring).
+        """
+        heap = self._mshr_heap
+        mshr = self._mshr
+        while heap and heap[0][0] <= cycle:
+            rc, _, tag = heapq.heappop(heap)
+            ent = mshr.get(tag)
+            if ent is None or ent[0] != rc:
+                continue  # stale heap entry (flushed or re-fetched)
+            del mshr[tag]
+            self._install(tag, dirty=False, cycle=rc)
+
+    def earliest_ready(self) -> Optional[int]:
+        """Ready cycle of the earliest in-flight fetch, or None."""
+        heap = self._mshr_heap
+        mshr = self._mshr
+        while heap:
+            rc, _, tag = heap[0]
+            ent = mshr.get(tag)
+            if ent is not None and ent[0] == rc:
+                return rc
+            heapq.heappop(heap)
+        return None
 
     def _install(self, tag: int, dirty: bool, cycle: int) -> None:
-        if tag in self._lines:
-            line = self._lines[tag]
+        lines = self._lines
+        line = lines.get(tag)
+        if line is not None:
             line.dirty = line.dirty or dirty
             line.last_use = cycle
+            lines.move_to_end(tag)
             return
-        if len(self._lines) >= self.n_lines:
-            # LRU evict; dirty lines cost a writeback (VMEM_WRBK row).
-            victim = min(self._lines.values(), key=lambda l: l.last_use)
+        if len(lines) >= self.n_lines:
+            # LRU evict (front of the ordered dict); dirty lines cost a
+            # writeback (VMEM_WRBK row).
+            _, victim = lines.popitem(last=False)
             if victim.dirty:
                 self._writebacks += 1
-                self.hbm.occupy(self.line_size, cycle)
-            del self._lines[victim.tag]
-        self._lines[tag] = _Line(tag, dirty, cycle)
+                self.hbm.occupy(self.line_size, cycle, is_write=True)
+        lines[tag] = _Line(tag, dirty, cycle)
 
     # -- the access path -----------------------------------------------------------
     def access_line(self, tag: int, is_write: bool, cycle: int, stream_id: int) -> CacheDecision:
-        line = self._lines.get(tag)
+        lines = self._lines
+        line = lines.get(tag)
         if line is not None:
             line.last_use = cycle
             if is_write:
                 line.dirty = True
-            return CacheDecision(AccessOutcome.HIT)
+            lines.move_to_end(tag)
+            return _HIT
 
         inflight = self._mshr.get(tag)
         if inflight is not None:
@@ -182,21 +252,20 @@ class VMEMCache:
                 position = streams.index(stream_id)
             else:
                 if len(streams) >= self.mshr_max_merge:
-                    return CacheDecision(
-                        AccessOutcome.RESERVATION_FAILURE, FailOutcome.MSHR_MERGE_FAIL
-                    )
+                    return _FAIL_MSHR_MERGE
                 streams.append(stream_id)
                 position = len(streams) - 1
             return CacheDecision(AccessOutcome.HIT_RESERVED, ready_cycle=ready_cycle + position)
 
         if len(self._mshr) >= self.mshr_entries:
-            return CacheDecision(AccessOutcome.RESERVATION_FAILURE, FailOutcome.MSHR_ENTRY_FAIL)
+            return _FAIL_MSHR_ENTRY
         if self.hbm.saturated(cycle, self.bw_stall_horizon):
-            return CacheDecision(AccessOutcome.RESERVATION_FAILURE, FailOutcome.BANDWIDTH_FAIL)
+            return _FAIL_BANDWIDTH
 
         done = self.hbm.occupy(self.line_size, cycle)
         ready_cycle = max(cycle + self.hbm_latency, done)
         self._mshr[tag] = (ready_cycle, [stream_id])  # write-allocate either way
+        heapq.heappush(self._mshr_heap, (ready_cycle, next(self._mshr_seq), tag))
         return CacheDecision(AccessOutcome.MISS, ready_cycle=ready_cycle)
 
     # -- introspection ----------------------------------------------------------
@@ -213,3 +282,4 @@ class VMEMCache:
     def flush(self) -> None:
         self._lines.clear()
         self._mshr.clear()
+        self._mshr_heap.clear()

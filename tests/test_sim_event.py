@@ -1,0 +1,315 @@
+"""Cross-path identity: the event-driven simulator loop must be bit-identical
+to the reference cycle-stepped loop on every workload.
+
+"Bit-identical" here means equal on everything a simulation produces:
+
+* total ``cycles``,
+* per-stream cumulative / per-window / failure matrices,
+* both clean lanes (matrix + lost-update counter),
+* the kernel timeline (launch/exit cycles, last-updated markers),
+* the rendered log, launch lines and kernel-exit report text included.
+
+Kernel ``uid``s come from a process-global counter, so two back-to-back
+workload constructions legitimately differ in uids; ``SimResult.signature()``
+(the one comparison definition, shared with ``benchmarks/sim_speed.py``)
+normalizes uid digits in log text and keys timelines by
+(stream, launch-order) instead of raw uid.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.stats import AccessOutcome, AccessType
+from repro.sim import (
+    KernelDesc,
+    SimConfig,
+    TPUSimulator,
+    deepbench_like_workload,
+    l2_lat_multistream,
+    mixed_stream_workload,
+    pointer_chase_trace,
+    streaming_trace,
+)
+from repro.sim.kernel_desc import Access
+
+R = AccessType.GLOBAL_ACC_R
+W = AccessType.GLOBAL_ACC_W
+
+
+def result_signature(res):
+    return res.signature()
+
+
+def assert_engines_identical(run_workload):
+    """``run_workload(engine)`` → SimResult; asserts cycle == event."""
+    a = run_workload("cycle").signature()
+    b = run_workload("event").signature()
+    for key in a:
+        assert a[key] == b[key], f"engine mismatch in {key!r}"
+
+
+class TestWorkloadIdentity:
+    """Every microbench workload, both engines, equal everything."""
+
+    @pytest.mark.parametrize(
+        "kwargs",
+        [
+            dict(n_streams=4, n_loads=64),
+            dict(n_streams=2, n_loads=256),
+            dict(n_streams=8, n_loads=128),
+            dict(n_streams=4, n_loads=512),
+            dict(n_streams=4, n_loads=64, serialize=True),
+            dict(n_streams=4, n_loads=64, concurrent=False),
+        ],
+        ids=["4x64", "2x256", "8x128", "4x512", "serialized", "no-concurrent"],
+    )
+    def test_l2_lat(self, kwargs):
+        assert_engines_identical(lambda eng: l2_lat_multistream(engine=eng, **kwargs))
+
+    def test_l2_lat_straggler(self):
+        assert_engines_identical(
+            lambda eng: l2_lat_multistream(
+                2, 128, config=SimConfig(stream_slowdown={1: 4.0}), engine=eng
+            )
+        )
+
+    @pytest.mark.parametrize(
+        "kwargs",
+        [
+            dict(n_streams=1, n=1 << 12),
+            dict(n_streams=3, n=1 << 14),
+            dict(n_streams=2, n=1 << 12, serialize=True),
+        ],
+        ids=["1stream", "3stream", "serialized"],
+    )
+    def test_mixed(self, kwargs):
+        assert_engines_identical(lambda eng: mixed_stream_workload(engine=eng, **kwargs))
+
+    @pytest.mark.parametrize(
+        "kwargs",
+        [
+            dict(n_streams=2, repeats=4),
+            dict(n_streams=3, repeats=6),
+            dict(n_streams=2, repeats=4, serialize=True),
+        ],
+        ids=["2x4", "3x6", "serialized"],
+    )
+    def test_deepbench(self, kwargs):
+        assert_engines_identical(lambda eng: deepbench_like_workload(engine=eng, **kwargs))
+
+
+def _run_descs(engine, descs_by_stream, cfg_kwargs):
+    sim = TPUSimulator(SimConfig(engine=engine, **cfg_kwargs))
+    streams = [sim.create_stream() for _ in descs_by_stream]
+    for s, descs in zip(streams, descs_by_stream):
+        for d in descs:
+            # fresh copy per engine: uids/caches must not be shared state
+            sim.launch(
+                s.stream_id,
+                KernelDesc(
+                    name=d.name,
+                    flops=d.flops,
+                    trace=list(d.trace) if d.trace is not None else None,
+                    hbm_rd_bytes=d.hbm_rd_bytes,
+                    hbm_wr_bytes=d.hbm_wr_bytes,
+                    ici_bytes=d.ici_bytes,
+                    addr_base=d.addr_base,
+                    dependent=d.dependent,
+                    issue_width=d.issue_width,
+                ),
+            )
+    return sim.run()
+
+
+class TestEdgeCaseIdentity:
+    """Hand-picked states that stress the fast-forward window boundaries."""
+
+    def test_mshr_exhaustion(self):
+        cfg = dict(mshr_entries=4, hbm_latency=500)
+        descs = [[KernelDesc(name="k", trace=streaming_trace(0, 64 * 512, R))]]
+        assert_engines_identical(lambda eng: _run_descs(eng, descs, cfg))
+
+    def test_capacity_evictions_with_dirty_writebacks(self):
+        # 16-line VMEM, write pass then re-read → evictions + writebacks
+        trace = (
+            streaming_trace(0, 64 * 512, W)
+            + pointer_chase_trace(0, 64, load_size=8, stride=512) * 2
+        )
+        descs = [[KernelDesc(name="k", trace=trace, dependent=True)]]
+        assert_engines_identical(
+            lambda eng: _run_descs(eng, descs, dict(vmem_capacity=16 * 512))
+        )
+
+    def test_event_dependency_chain(self):
+        def run(engine):
+            sim = TPUSimulator(SimConfig(engine=engine))
+            s1, s2 = sim.create_stream(), sim.create_stream()
+            ev = sim.create_event()
+            sim.launch(
+                s1.stream_id,
+                KernelDesc(name="prod", trace=streaming_trace(0, 64 * 512, R)),
+                record_events=[ev.event_id],
+            )
+            sim.launch(
+                s2.stream_id,
+                KernelDesc(name="cons", trace=pointer_chase_trace(1 << 22, 96), dependent=True),
+                wait_events=[ev.event_id],
+            )
+            return sim.run()
+
+        assert_engines_identical(run)
+
+    def test_trace_plus_synth_kernel(self):
+        # combined trace + aggregate-cost kernel exercises the FF bail-outs
+        descs = [
+            [
+                KernelDesc(
+                    name="combo",
+                    trace=pointer_chase_trace(0, 64),
+                    dependent=True,
+                    hbm_rd_bytes=64 * 512,
+                    flops=1e6,
+                )
+            ],
+            [KernelDesc(name="gemm", flops=5e6, hbm_rd_bytes=256 * 512, hbm_wr_bytes=32 * 512)],
+        ]
+        assert_engines_identical(lambda eng: _run_descs(eng, descs, {}))
+
+    def test_ici_in_trace_completes(self):
+        """Regression: a trace containing ICI accesses used to livelock
+        (the ICI branch never consumed the trace entry)."""
+        from repro.core.stats import AccessType as AT
+
+        trace = (
+            streaming_trace(0, 8 * 512, R)
+            + streaming_trace(1 << 16, 4 * 512, AT.ICI_SND)
+            + streaming_trace(0, 4 * 512, W)
+        )
+        descs = [[KernelDesc(name="k", trace=trace)],
+                 [KernelDesc(name="dep", trace=pointer_chase_trace(0, 32), dependent=True)]]
+        assert_engines_identical(lambda eng: _run_descs(eng, descs, dict(max_cycles=100_000)))
+
+    def test_synth_with_ici(self):
+        descs = [
+            [KernelDesc(name="allreduce", flops=1e6, ici_bytes=128 * 512, hbm_rd_bytes=64 * 512)],
+            [KernelDesc(name="gemm", flops=2e6, hbm_rd_bytes=128 * 512)],
+        ]
+        assert_engines_identical(lambda eng: _run_descs(eng, descs, {}))
+
+    def test_dependent_synth_kernel(self):
+        descs = [[KernelDesc(name="dep-synth", hbm_rd_bytes=64 * 512, dependent=True)]]
+        assert_engines_identical(lambda eng: _run_descs(eng, descs, {}))
+
+    def test_straggler_synth(self):
+        descs = [
+            [KernelDesc(name="a", hbm_rd_bytes=64 * 512)],
+            [KernelDesc(name="b", hbm_rd_bytes=64 * 512)],
+        ]
+        assert_engines_identical(
+            lambda eng: _run_descs(eng, descs, dict(stream_slowdown={2: 3.0}))
+        )
+
+    def test_max_cycles_exceeded_identically(self):
+        # a kernel waiting on an event nobody records deadlocks both loops
+        def run(engine):
+            sim = TPUSimulator(SimConfig(engine=engine, max_cycles=500))
+            s = sim.create_stream()
+            ev = sim.create_event()
+            sim.launch(s.stream_id, KernelDesc(name="k", trace=pointer_chase_trace(0, 4)),
+                       wait_events=[ev.event_id])
+            sim.run()
+
+        for engine in ("cycle", "event"):
+            with pytest.raises(RuntimeError, match="max_cycles=500"):
+                run(engine)
+
+    def test_unknown_engine_rejected(self):
+        sim = TPUSimulator(SimConfig(engine="warp"))
+        sim.launch(0, KernelDesc(name="k", trace=pointer_chase_trace(0, 4)))
+        with pytest.raises(ValueError, match="unknown SimConfig.engine"):
+            sim.run()
+
+
+def _random_workload(seed):
+    """Randomized multi-stream mixes of dependent chases, streaming traces,
+    synthesized kernels, and event dependencies over a small address space
+    (line reuse, MSHR merges, evictions all reachable)."""
+    rng = random.Random(seed)
+    n_streams = rng.randint(1, 4)
+    descs_by_stream = []
+    for _ in range(n_streams):
+        descs = []
+        for _ in range(rng.randint(1, 3)):
+            kind = rng.choice(["chase", "stream", "synth", "combo"])
+            base = rng.randrange(0, 8) * 4096
+            if kind == "chase":
+                trace = pointer_chase_trace(
+                    base, rng.randint(1, 96), load_size=rng.choice([4, 8, 16]),
+                    stride=rng.choice([8, 512, 520]),
+                )
+                descs.append(KernelDesc(name="chase", trace=trace, dependent=True))
+            elif kind == "stream":
+                n_bytes = rng.randint(1, 24) * 512
+                atype = rng.choice([R, W])
+                descs.append(
+                    KernelDesc(
+                        name="stream",
+                        trace=streaming_trace(base, n_bytes, atype),
+                        issue_width=rng.choice([1, 2, 4]),
+                        flops=rng.choice([0.0, 1e5]),
+                    )
+                )
+            elif kind == "synth":
+                descs.append(
+                    KernelDesc(
+                        name="synth",
+                        flops=rng.choice([0.0, 1e5, 1e7]),
+                        hbm_rd_bytes=rng.randint(0, 64) * 512,
+                        hbm_wr_bytes=rng.randint(0, 16) * 512,
+                        ici_bytes=rng.randint(0, 8) * 512,
+                        addr_base=base,
+                    )
+                )
+            else:
+                descs.append(
+                    KernelDesc(
+                        name="combo",
+                        trace=pointer_chase_trace(base, rng.randint(1, 48)),
+                        dependent=rng.random() < 0.5,
+                        hbm_rd_bytes=rng.randint(0, 32) * 512,
+                        flops=rng.choice([0.0, 1e6]),
+                    )
+                )
+        descs_by_stream.append(descs)
+    cfg = dict(
+        vmem_capacity=rng.choice([16 * 512, 64 * 512, 16 * 2**20]),
+        hbm_latency=rng.choice([10, 100]),
+        serialize_streams=rng.random() < 0.2,
+    )
+    if rng.random() < 0.3:
+        cfg["stream_slowdown"] = {rng.randint(1, n_streams): rng.choice([2.0, 3.5])}
+    return descs_by_stream, cfg
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_randomized_trace_identity(seed):
+    descs, cfg = _random_workload(seed)
+    assert_engines_identical(lambda eng: _run_descs(eng, descs, cfg))
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10_000))
+    def test_randomized_trace_identity_hypothesis(seed):
+        descs, cfg = _random_workload(seed)
+        assert_engines_identical(lambda eng: _run_descs(eng, descs, cfg))
