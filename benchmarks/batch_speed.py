@@ -1,0 +1,132 @@
+"""Batch-runner benchmark: process-pool sweep vs the serial fallback.
+
+An 8-scenario sweep (cycle-engine jobs — the honest compute-bound reference
+loop, which parallelizes with no shared state) is run twice through
+:class:`repro.sim.batch.BatchRunner`: once serially, once across a process
+pool.  Every pair is checked for **bit-identical** merges
+(:meth:`BatchResult.signature` equality — per-job run signatures plus the
+namespaced merged engine), so the recorded speedup can never come from
+divergent simulation, and every job's per-stream oracle is re-checked
+inline.
+
+Writes the trajectory to ``BENCH_batch_speed.json`` (repo root by default)::
+
+    PYTHONPATH=src python -m benchmarks.batch_speed            # full tier
+    PYTHONPATH=src python -m benchmarks.batch_speed --quick    # CI smoke tier
+
+Exit status is non-zero if the pooled and serial merges diverge, any oracle
+fails, or — with >= ``GATE_MIN_WORKERS`` workers available (the CI gate;
+fewer cores record the ratio without enforcing it) — the pool path is slower
+than serial.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing as mp
+import os
+import sys
+
+from repro.sim.batch import BatchJob, BatchRunner
+
+from .common import csv_line
+
+#: the pool-vs-serial gate only binds when this many workers are available
+GATE_MIN_WORKERS = 4
+
+# 8-scenario sweeps.  Params are sized so each job is heavy enough that pool
+# fan-out beats fork/IPC overhead (the quick tier is ~1s serial on the dev
+# container; the full tier ~2x that).
+QUICK_SWEEP = [
+    ("l2_lat", dict(n_loads=4096, n_streams=4)),
+    ("mixed_stream", dict(n=1 << 17)),
+    ("deepbench", dict(repeats=12, n_streams=3)),
+    ("cache_thrash", dict(arr_lines=64, passes=16)),
+    ("producer_consumer", dict(stages=16, stage_lines=128)),
+    ("mps_like", dict(tenants=4, kernels_each=8, rd_kb=512)),
+    ("poisson_burst", dict(servers=4, bursts=12, seed=0)),
+    ("straggler", dict(long_lines=32768, short_kernels=8)),
+]
+FULL_SWEEP = [
+    ("l2_lat", dict(n_loads=8192, n_streams=4)),
+    ("mixed_stream", dict(n=1 << 18)),
+    ("deepbench", dict(repeats=24, n_streams=3)),
+    ("cache_thrash", dict(arr_lines=64, passes=32)),
+    ("producer_consumer", dict(stages=32, stage_lines=128)),
+    ("mps_like", dict(tenants=4, kernels_each=16, rd_kb=512)),
+    ("poisson_burst", dict(servers=4, bursts=24, seed=0)),
+    ("straggler", dict(long_lines=65536, short_kernels=16)),
+]
+
+
+def run(quick: bool = False, workers: int = 0) -> dict:
+    sweep = QUICK_SWEEP if quick else FULL_SWEEP
+    jobs = [BatchJob.make(name, params, engine="cycle") for name, params in sweep]
+    runner = BatchRunner(jobs, workers=workers or None)
+    serial = runner.run(parallel=False)
+    pooled = runner.run(parallel=True)
+
+    identical = serial.signature() == pooled.signature()
+    oracle_fails = serial.oracle_failures() + pooled.oracle_failures()
+    speedup = serial.wall_s / pooled.wall_s if pooled.wall_s else float("inf")
+    gate_engaged = pooled.workers >= GATE_MIN_WORKERS
+    gate_ok = (speedup > 1.0) if gate_engaged else True
+    ok = identical and not oracle_fails and gate_ok
+
+    csv_line(
+        "batch_speed_sweep8",
+        pooled.wall_s * 1e6,
+        f"serial={serial.wall_s*1e3:.0f}ms pool={pooled.wall_s*1e3:.0f}ms "
+        f"workers={pooled.workers} speedup={speedup:.2f}x identical={identical} "
+        f"gate={'on' if gate_engaged else f'off(<{GATE_MIN_WORKERS}w)'}",
+    )
+    return {
+        "ok": ok,
+        "mode": "quick" if quick else "full",
+        "n_jobs": len(jobs),
+        "workers": pooled.workers,
+        "cpu_count": mp.cpu_count(),
+        "serial_s": round(serial.wall_s, 4),
+        "pool_s": round(pooled.wall_s, 4),
+        "speedup": round(speedup, 2),
+        "identical": identical,
+        "oracle_failures": oracle_fails,
+        "gate_engaged": gate_engaged,
+        "gate_min_workers": GATE_MIN_WORKERS,
+        "jobs": [
+            {"scenario": p["scenario"], "params": p["params"], "cycles": p["cycles"]}
+            for p in serial.payloads
+        ],
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI smoke tier (smaller sweep)")
+    ap.add_argument("--workers", type=int, default=0, help="pool size (default: all cores)")
+    ap.add_argument(
+        "--out",
+        default=os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                             "BENCH_batch_speed.json"),
+        help="where to write the JSON trajectory (default: repo root)",
+    )
+    args = ap.parse_args()
+    payload = run(quick=args.quick, workers=args.workers)
+    payload["benchmark"] = "batch_speed"
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    if not payload["ok"]:
+        print(
+            "FAIL: pooled/serial merges diverged, an oracle failed, or the pool "
+            "path was slower than serial with the gate engaged",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,13 +20,18 @@ def main() -> None:
     ap.add_argument("--artifacts", default="artifacts/dryrun")
     args = ap.parse_args()
 
-    from . import fig2_l2lat, fig34_mixed, fig5_deepbench, serving, sim_speed, stats_ingest
+    # Sections import lazily, jax-free ones first: the batch runner prefers
+    # fork-pool workers, which must be spawned before anything (serving,
+    # fig5's compiled-HLO tier) loads jax and its thread pools.
+    from . import batch_speed, fig2_l2lat, fig34_mixed, sim_speed, stats_ingest
 
     results = []
     print("=== StatsEngine: batch ingestion vs per-increment seed path ===")
     results.append(("stats_ingest", stats_ingest.run()["ok"]))
     print("\n=== Simulator core: event-driven vs cycle-stepped engine ===")
     results.append(("sim_speed", sim_speed.run(quick=True, repeats=3)["ok"]))
+    print("\n=== Batch runner: pooled scenario sweep vs serial fallback ===")
+    results.append(("batch_speed", batch_speed.run(quick=True)["ok"]))
     print("\n=== Fig 2: l2_lat 4-stream (tip / clean / serialized) ===")
     results.append(("fig2", fig2_l2lat.run()["ok"]))
     print("\n=== Fig 3: mixed kernels, 1 side stream ===")
@@ -34,10 +39,14 @@ def main() -> None:
     print("\n=== Fig 4: mixed kernels, 3 side streams ===")
     results.append(("fig4", fig34_mixed.run(3)["ok"]))
     print("\n=== Fig 5: DeepBench-analog, 2 request streams ===")
+    from . import fig5_deepbench
+
     results.append(("fig5", fig5_deepbench.run(False)["ok"]))
     if args.with_hlo:
         results.append(("fig5_hlo", fig5_deepbench.run(True)["ok"]))
     print("\n=== Serving: per-stream observability ===")
+    from . import serving
+
     results.append(("serving", serving.run()["ok"]))
 
     if os.path.isdir(args.artifacts) and os.listdir(args.artifacts):

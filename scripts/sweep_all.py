@@ -1,35 +1,134 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 --xla_backend_optimization_level=0"
-import sys, time
-sys.path.insert(0, "src")
-from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
-from repro.launch.dryrun import run_cell
+"""Sweep driver.
 
-# order: decode/long first (seconds), then prefill, then train small->large
-archs = list_archs()
-sizes = {a: get_config(a).param_count() for a in archs}
-cells = []
-for kind in ("decode", "prefill", "train"):
-    for arch in sorted(archs, key=lambda a: sizes[a]):
-        for shape_name in applicable_shapes(get_config(arch)):
-            if SHAPES[shape_name].kind != kind:
+Two modes:
+
+* ``--mode scenarios`` (default) — fan the whole scenario registry across
+  cores with :class:`repro.sim.batch.BatchRunner`: every registered scenario
+  on both engine loops, pooled, with the serial fallback cross-checked
+  bit-identical and every per-stream oracle verified inline.  Writes
+  ``artifacts/sweeps/scenarios.json`` (per-job payloads + the merged
+  per-stream matrix signature) and prints the merged multi-run report.
+
+    PYTHONPATH=src python scripts/sweep_all.py
+    PYTHONPATH=src python scripts/sweep_all.py --workers 8 --engines event
+    PYTHONPATH=src python scripts/sweep_all.py --no-verify   # skip serial cross-check
+
+* ``--mode dryrun`` — the legacy XLA dry-run sweep over every
+  (arch, shape, mesh) cell (slow; needs the jax toolchain warm).
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+
+def sweep_scenarios(args) -> int:
+    from repro.core.sinks import TextSink
+    from repro.sim.batch import BatchRunner, sweep_jobs
+
+    engines = tuple(e.strip() for e in args.engines.split(",") if e.strip())
+    if not engines or any(e not in ("cycle", "event") for e in engines):
+        print(f"--engines must name 'cycle' and/or 'event', got {args.engines!r}", file=sys.stderr)
+        return 2
+    jobs = sweep_jobs(engines=engines)
+    print(f"sweeping {len(jobs)} jobs ({len(jobs)//len(engines)} scenarios x {engines})", flush=True)
+    runner = BatchRunner(jobs, workers=args.workers or None)
+    pooled = runner.run(parallel=True)
+    print(f"pooled: {pooled.wall_s:.2f}s on {pooled.workers} workers", flush=True)
+
+    # identical stays None (never claimed) when the cross-check is skipped
+    identical = None
+    serial_s = None
+    if not args.no_verify:
+        serial = runner.run(parallel=False)
+        serial_s = serial.wall_s
+        identical = serial.signature() == pooled.signature()
+        print(f"serial: {serial.wall_s:.2f}s  bit-identical={identical}", flush=True)
+
+    fails = pooled.oracle_failures()
+    for f in fails:
+        print(f"ORACLE FAIL: {f}", flush=True)
+
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(
+            {
+                "ok": identical is not False and not fails,
+                "n_jobs": len(jobs),
+                "engines": list(engines),
+                "workers": pooled.workers,
+                "pool_s": round(pooled.wall_s, 4),
+                "serial_s": round(serial_s, 4) if serial_s is not None else None,
+                "identical": identical,
+                "oracle_failures": fails,
+                "jobs": [
+                    {k: p[k] for k in ("scenario", "params", "engine", "cycles", "oracle")}
+                    for p in pooled.payloads
+                ],
+                "merged": pooled.merged.signature(),
+            },
+            f, indent=2, sort_keys=True,
+        )
+        f.write("\n")
+    print(f"wrote {args.out}", flush=True)
+    pooled.emit([TextSink(sys.stdout)])
+    return 0 if (identical is not False and not fails) else 1
+
+
+def sweep_dryrun() -> int:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 --xla_backend_optimization_level=0"
+    from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
+    from repro.launch.dryrun import run_cell
+
+    # order: decode/long first (seconds), then prefill, then train small->large
+    archs = list_archs()
+    sizes = {a: get_config(a).param_count() for a in archs}
+    cells = []
+    for kind in ("decode", "prefill", "train"):
+        for arch in sorted(archs, key=lambda a: sizes[a]):
+            for shape_name in applicable_shapes(get_config(arch)):
+                if SHAPES[shape_name].kind != kind:
+                    continue
+                for mesh in ("pod1", "pod2"):
+                    cells.append((arch, shape_name, mesh))
+    print(f"total cells: {len(cells)}", flush=True)
+    t0 = time.time()
+    fails = 0
+    for i, (arch, shape_name, mesh) in enumerate(cells):
+        art = f"artifacts/dryrun/{arch}__{shape_name}__{mesh}.json"
+        if os.path.exists(art):
+            if json.load(open(art)).get("status") == "ok":
                 continue
-            for mesh in ("pod1", "pod2"):
-                cells.append((arch, shape_name, mesh))
-print(f"total cells: {len(cells)}", flush=True)
-t0 = time.time()
-fails = 0
-for i, (arch, shape_name, mesh) in enumerate(cells):
-    art = f"artifacts/dryrun/{arch}__{shape_name}__{mesh}.json"
-    if os.path.exists(art):
-        import json
-        if json.load(open(art)).get("status") == "ok":
-            continue
-    print(f"--- [{i+1}/{len(cells)}] {arch} {shape_name} {mesh} (t+{(time.time()-t0)/60:.1f}m)", flush=True)
-    try:
-        rec = run_cell(arch, shape_name, mesh, out_dir="artifacts/dryrun", verbose=False)
-        fails += rec["status"] != "ok"
-    except Exception as e:
-        print("DRIVER ERROR:", e, flush=True)
-        fails += 1
-print(f"SWEEP DONE fails={fails} wall={(time.time()-t0)/60:.1f}m", flush=True)
+        print(f"--- [{i+1}/{len(cells)}] {arch} {shape_name} {mesh} (t+{(time.time()-t0)/60:.1f}m)", flush=True)
+        try:
+            rec = run_cell(arch, shape_name, mesh, out_dir="artifacts/dryrun", verbose=False)
+            fails += rec["status"] != "ok"
+        except Exception as e:
+            print("DRIVER ERROR:", e, flush=True)
+            fails += 1
+    print(f"SWEEP DONE fails={fails} wall={(time.time()-t0)/60:.1f}m", flush=True)
+    return 1 if fails else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", choices=("scenarios", "dryrun"), default="scenarios")
+    ap.add_argument("--engines", default="cycle,event", help="comma-separated engine list")
+    ap.add_argument("--workers", type=int, default=0, help="pool size (default: all cores)")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the serial cross-check (pooled run only)")
+    ap.add_argument("--out", default="artifacts/sweeps/scenarios.json")
+    args = ap.parse_args()
+    if args.mode == "dryrun":
+        return sweep_dryrun()
+    return sweep_scenarios(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

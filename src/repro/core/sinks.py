@@ -39,8 +39,14 @@ __all__ = [
     "MultiSink",
     "make_sink",
     "render_text",
+    "merged_report",
+    "ALL_STREAMS",
     "SINK_KINDS",
 ]
+
+#: ``Report.stream_id`` value meaning "aggregated over every stream" — used
+#: by multi-run merge reports, where a single stream id no longer applies.
+ALL_STREAMS = -1
 
 
 @dataclass
@@ -202,3 +208,32 @@ def render_text(report: Report) -> str:
     buf = io.StringIO()
     TextSink(buf).emit(report)
     return buf.getvalue()
+
+
+def merged_report(
+    stats,
+    *,
+    source: str = "batch",
+    event: str = "batch_merged",
+    fields: Dict[str, object] = None,
+    header: str = "",
+) -> Report:
+    """A multi-run merge report: the aggregate of every stream in ``stats``.
+
+    ``stats`` is anything with the :class:`~repro.core.stats.StatTable` read
+    API (``aggregate(fail=...)`` and a ``name``) — a
+    :class:`~repro.core.engine.StatsEngine` holding a batch merge, a plain
+    table, a collector result.  The report carries the summed main and
+    failure matrices under ``stream_id=ALL_STREAMS`` (-1), flowing through
+    every sink like any per-stream report."""
+    return Report(
+        source=source,
+        event=event,
+        stream_id=ALL_STREAMS,
+        header=header,
+        fields=dict(fields or {}),
+        blocks=[
+            StatBlock(stats.name, stats.aggregate()),
+            StatBlock(f"{stats.name}_fail", stats.aggregate(fail=True), fail=True),
+        ],
+    )

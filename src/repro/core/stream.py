@@ -125,15 +125,19 @@ class StreamManager:
 
     # -- scheduling (Accel-Sim main.cc launch-window loop analog) --------------
     def _launch_candidates(self, *, serialize: bool = False, can_start: bool = True):
-        """Yield launchable kernels in selection order (lowest stream id
-        first, FIFO head only) — the one definition of launch eligibility,
-        shared by :meth:`launchable` and :meth:`next_launchable` so the two
-        engine loops can never drift in scheduling."""
+        """Yield launchable kernels in selection order (highest stream
+        priority first, then lowest stream id; FIFO head only) — the one
+        definition of launch eligibility, shared by :meth:`launchable` and
+        :meth:`next_launchable` so the two engine loops can never drift in
+        scheduling.  All streams default to priority 0, where the order
+        degenerates to the classic lowest-stream-id scan; a higher-priority
+        stream (``cudaStreamCreateWithPriority`` analog) wins every contended
+        launch slot."""
         if not can_start:
             return
         if serialize and self._busy_streams:
             return  # §5.1 patch: require busy_streams.size() == 0
-        for sid in sorted(self._queues):
+        for sid in sorted(self._queues, key=lambda s: (-self._streams[s].priority, s)):
             if sid in self._busy_streams:
                 continue  # stream_busy = true
             for w in self._queues[sid]:

@@ -9,6 +9,16 @@ baseline ("clean", with the same-cycle undercount) stat views side by side.
 from .kernel_desc import Access, KernelDesc, LINE_SIZE, pointer_chase_trace, streaming_trace
 from .resources import Bandwidth, Compute, HW_V5E, VMEMCache
 from .executor import SimConfig, SimResult, TPUSimulator
+from .scenarios import (
+    Launch,
+    ScenarioInstance,
+    ScenarioSpec,
+    build,
+    get_spec,
+    list_scenarios,
+    scenario,
+)
+from .batch import BatchJob, BatchResult, BatchRunner, run_job, sweep_jobs
 from .microbench import (
     deepbench_like_workload,
     l2_lat_expected_counts,
@@ -30,6 +40,18 @@ __all__ = [
     "SimConfig",
     "SimResult",
     "TPUSimulator",
+    "Launch",
+    "ScenarioInstance",
+    "ScenarioSpec",
+    "scenario",
+    "build",
+    "get_spec",
+    "list_scenarios",
+    "BatchJob",
+    "BatchResult",
+    "BatchRunner",
+    "run_job",
+    "sweep_jobs",
     "deepbench_like_workload",
     "l2_lat_expected_counts",
     "l2_lat_multistream",

@@ -1,0 +1,282 @@
+"""Process-parallel batch runner over the scenario library.
+
+Independent simulation configurations are embarrassingly parallel — no state
+is shared between two scenario runs — so a sweep fans out across cores the
+way "Parallelizing a modern GPU simulator" exploits independent configs.
+The unit of work is a :class:`BatchJob` (scenario name + params + engine):
+small, picklable, and rebuilt *inside* the worker, so neither kernel
+descriptors nor simulator state ever cross a process boundary.  Workers
+return plain-structure payloads — the run's :meth:`SimResult.signature`
+(uid-normalized, so pooled and serial runs of one job compare equal), the
+stream-name map, and an inline oracle check.
+
+Merging is deterministic and order-independent:
+
+* every job's stream ids are **namespaced** by job index
+  (:func:`repro.core.collector.namespace_stream` — job index plays the host
+  id), so two jobs' ``stream 1`` rows never collide;
+* each per-stream matrix lands in one merged
+  :class:`~repro.core.engine.StatsEngine` through ``record_batch`` (the
+  columnar buffers; one vectorized scatter per flush), with the per-window
+  and clean lanes disabled — the merge is a pure ``+=`` over uint64 cells,
+  commutative by construction;
+* payloads are reduced in job order, so the pooled path (``pool.map``
+  preserves order) and the serial fallback are **bit-identical** —
+  ``tests/test_batch.py`` asserts equality of full
+  :meth:`BatchResult.signature` payloads.
+
+    jobs = sweep_jobs(engines=("event",))          # whole registry
+    result = BatchRunner(jobs, workers=8).run()    # or .run(parallel=False)
+    result.merged.aggregate()                      # one engine, all runs
+    result.emit([TextSink(sys.stdout)])            # merged multi-run report
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.collector import namespace_stream, split_namespaced
+from repro.core.engine import StatsEngine
+from repro.core.sinks import ReportSink, merged_report
+from repro.core.stats import AccessOutcome
+from .scenarios import ScenarioInstance, build, get_spec, list_scenarios
+
+__all__ = ["BatchJob", "BatchResult", "BatchRunner", "sweep_jobs", "run_job"]
+
+
+@dataclass(frozen=True)
+class BatchJob:
+    """One unit of batch work: a scenario instantiation on one engine."""
+
+    scenario: str
+    params: Tuple[Tuple[str, object], ...] = ()
+    engine: str = "event"
+
+    @classmethod
+    def make(cls, scenario: str, params: Optional[Mapping[str, object]] = None,
+             engine: str = "event") -> "BatchJob":
+        return cls(scenario, tuple(sorted((params or {}).items())), engine)
+
+    def kwargs(self) -> Dict[str, object]:
+        return dict(self.params)
+
+
+def _oracle_check(inst: ScenarioInstance, res) -> Optional[Dict[str, object]]:
+    """Inline conformance: compare per-stream counts to the scenario oracle."""
+    if inst.expected is None:
+        return None
+    ids = inst.stream_ids
+    mismatches = []
+    for sname, exp in inst.expected.items():
+        m = res.stats.stream_matrix(ids[sname])
+        got = {
+            "HIT": int(m[:, AccessOutcome.HIT].sum()),
+            "MSHR_HIT": int(m[:, AccessOutcome.HIT_RESERVED].sum()),
+            "MISS": int(m[:, AccessOutcome.MISS].sum()),
+            "RES_FAIL": int(m[:, AccessOutcome.RESERVATION_FAILURE].sum()),
+        }
+        got["TOTAL"] = got["HIT"] + got["MSHR_HIT"] + got["MISS"]
+        for key, want in exp.items():
+            if got[key] != want:
+                mismatches.append(
+                    {"stream": sname, "key": key, "want": want, "got": got[key]}
+                )
+    return {"ok": not mismatches, "mismatches": mismatches}
+
+
+def run_job(job: BatchJob) -> Dict[str, object]:
+    """Worker body (also the serial fallback): build, run, flatten.
+
+    Returns only plain structures — everything downstream (merge, JSON
+    sweeps, signatures) consumes this payload, never live simulator state.
+    """
+    inst = build(job.scenario, **job.kwargs())
+    res = inst.run(engine=job.engine)
+    return {
+        "scenario": job.scenario,
+        "params": job.kwargs(),
+        "engine": job.engine,
+        "cycles": res.cycles,
+        "stream_ids": dict(inst.stream_ids),
+        "oracle": _oracle_check(inst, res),
+        "signature": res.signature(),
+    }
+
+
+def merge_payloads(payloads: Sequence[Mapping[str, object]]) -> StatsEngine:
+    """Reduce job payloads into one :class:`StatsEngine`.
+
+    Stream ids are namespaced by job index so per-job rows stay
+    distinguishable (recover with
+    :func:`repro.core.collector.split_namespaced`); cells land through
+    ``record_batch`` with the per-window/clean lanes off, making the merge a
+    commutative uint64 sum — independent of job completion order by
+    construction, and reduced in job order for byte determinism."""
+    merged = StatsEngine(name="Batch_merged_stats")
+    for idx, payload in enumerate(payloads):
+        streams = payload["signature"]["stats"]["streams"]
+        for sid, views in sorted(streams.items(), key=lambda kv: int(kv[0])):
+            gid = namespace_stream(idx, int(sid))
+            for key, fail in (("cum", False), ("fail", True)):
+                m = np.asarray(views[key], dtype=np.uint64)
+                t, o = np.nonzero(m)
+                if t.size == 0:
+                    # keep the stream row visible even when it counted nothing
+                    merged.record_batch(
+                        np.zeros(1, np.int64), np.zeros(1, np.int64),
+                        np.full(1, gid, np.int64), counts=np.zeros(1, np.uint64),
+                        fail=fail, pw=False, clean=False,
+                    )
+                    continue
+                merged.record_batch(
+                    t.astype(np.int64), o.astype(np.int64),
+                    np.full(t.size, gid, dtype=np.int64),
+                    counts=m[t, o],
+                    fail=fail, pw=False, clean=False,
+                )
+    merged.flush()
+    return merged
+
+
+@dataclass
+class BatchResult:
+    """Outcome of one batch run: ordered payloads + the deterministic merge."""
+
+    jobs: List[BatchJob]
+    payloads: List[Dict[str, object]]
+    merged: StatsEngine
+    workers: int
+    parallel: bool
+    wall_s: float
+
+    def signature(self) -> dict:
+        """Everything comparable about the batch: each job's identity and
+        uid-normalized run signature (in job order) plus the merged engine's
+        full signature.  The pooled and serial paths must produce equal
+        values — the bit-identity contract ``tests/test_batch.py`` enforces
+        (wall-clock and worker count are deliberately excluded)."""
+        return {
+            "jobs": [
+                {
+                    "scenario": p["scenario"],
+                    "params": sorted(p["params"].items()),
+                    "engine": p["engine"],
+                    "cycles": p["cycles"],
+                    "oracle": p["oracle"],
+                    "signature": p["signature"],
+                }
+                for p in self.payloads
+            ],
+            "merged": self.merged.signature(),
+        }
+
+    def oracle_failures(self) -> List[Dict[str, object]]:
+        out = []
+        for p in self.payloads:
+            if p["oracle"] is not None and not p["oracle"]["ok"]:
+                out.append({"scenario": p["scenario"], "params": p["params"],
+                            "engine": p["engine"],
+                            "mismatches": p["oracle"]["mismatches"]})
+        return out
+
+    def stream_rows(self) -> Dict[Tuple[int, int], np.ndarray]:
+        """(job index, original stream id) -> merged cumulative matrix."""
+        out = {}
+        for gid in self.merged.streams():
+            out[split_namespaced(gid)] = self.merged.stream_matrix(gid)
+        return out
+
+    def report(self):
+        """Merged multi-run report (``stream_id=ALL_STREAMS``)."""
+        return merged_report(
+            self.merged,
+            source="batch",
+            event="batch_merged",
+            fields={
+                "n_jobs": len(self.payloads),
+                "scenarios": sorted({p["scenario"] for p in self.payloads}),
+                "engines": sorted({p["engine"] for p in self.payloads}),
+                "total_cycles": int(sum(p["cycles"] for p in self.payloads)),
+                "workers": self.workers,
+                "parallel": self.parallel,
+            },
+        )
+
+    def emit(self, sinks: Sequence[ReportSink]) -> None:
+        rep = self.report()
+        for sink in sinks:
+            sink.emit(rep)
+
+
+def _pool_context():
+    # fork shares the already-imported interpreter (cheap, deterministic);
+    # spawn is the fallback — workers re-import repro by module name, so the
+    # parent's PYTHONPATH must reach src/ (true for every documented entry
+    # point).  Once jax is loaded the process is multithreaded (XLA thread
+    # pools) and forking it is a documented deadlock hazard, so spawn wins
+    # there too; scenario jobs never need jax, so the sim-only entry points
+    # keep the cheap fork path.
+    import sys
+
+    methods = mp.get_all_start_methods()
+    if "fork" in methods and "jax" not in sys.modules:
+        return mp.get_context("fork")
+    return mp.get_context("spawn")
+
+
+class BatchRunner:
+    """Shards :class:`BatchJob` lists across a process pool and merges.
+
+    ``run(parallel=False)`` is the serial fallback: same worker body, same
+    job order, same merge — proven bit-identical to the pooled path via
+    :meth:`BatchResult.signature` equality."""
+
+    def __init__(self, jobs: Iterable[BatchJob], workers: Optional[int] = None) -> None:
+        self.jobs = list(jobs)
+        if not self.jobs:
+            raise ValueError("BatchRunner needs at least one job")
+        cpus = mp.cpu_count()
+        self.workers = max(1, min(workers if workers is not None else cpus,
+                                  len(self.jobs), cpus))
+
+    def run(self, parallel: bool = True) -> BatchResult:
+        t0 = time.perf_counter()
+        use_pool = parallel and self.workers > 1 and len(self.jobs) > 1
+        if use_pool:
+            with _pool_context().Pool(self.workers) as pool:
+                payloads = pool.map(run_job, self.jobs)
+        else:
+            payloads = [run_job(j) for j in self.jobs]
+        merged = merge_payloads(payloads)
+        return BatchResult(
+            jobs=list(self.jobs),
+            payloads=payloads,
+            merged=merged,
+            workers=self.workers if use_pool else 1,
+            parallel=use_pool,
+            wall_s=time.perf_counter() - t0,
+        )
+
+
+def sweep_jobs(
+    scenarios: Optional[Sequence[str]] = None,
+    engines: Sequence[str] = ("event",),
+    params: Optional[Mapping[str, Mapping[str, object]]] = None,
+) -> List[BatchJob]:
+    """Default-parameter jobs for a scenario x engine sweep.
+
+    ``params`` optionally overrides per scenario name.  Unknown scenario
+    names fail fast (``get_spec`` raises)."""
+    names = list(scenarios) if scenarios is not None else list(list_scenarios())
+    for n in names:
+        get_spec(n)
+    return [
+        BatchJob.make(n, (params or {}).get(n), engine=e)
+        for n in names
+        for e in engines
+    ]

@@ -312,8 +312,8 @@ class TPUSimulator:
         self._cycle = 0
 
     # -- stream/launch API (mirrors cuda<<<>>> + events) -------------------------
-    def create_stream(self, name: str = ""):
-        return self.streams.create_stream(name)
+    def create_stream(self, name: str = "", priority: int = 0):
+        return self.streams.create_stream(name, priority)
 
     def launch(
         self,

@@ -1,0 +1,517 @@
+"""Scenario library — a registry of parameterized multi-stream workloads.
+
+The paper validates per-stream stat tracking by "designing a series of
+multi-stream microbenchmarks and checking their reported per-kernel,
+per-stream counts".  This module turns that method into infrastructure: every
+validation workload is a **registered scenario** — a named, parameterized
+builder that returns
+
+* a list of :class:`Launch` rows (stream name, kernel descriptor, event
+  dependencies, stream priority) — the declarative form of a multi-stream
+  workload, executable on either simulator engine; and
+* an **expected-count oracle**: per-stream analytic access counts in the
+  style of :func:`repro.sim.microbench.l2_lat_expected_counts`, or ``None``
+  where no closed form exists (those scenarios are pinned by checked-in
+  golden tables in ``tests/test_scenarios.py``).
+
+Registry API::
+
+    @scenario("mps_like", space={"tenants": (2, 3, 4)})
+    def mps_like(tenants=4, kernels_each=3, ...): ...
+
+    list_scenarios()            -> tuple of registered names
+    get_spec(name)              -> ScenarioSpec (builder, defaults, space)
+    build(name, **params)       -> ScenarioInstance
+    build(name).run(engine=...) -> SimResult
+
+Scenarios modeled here (beyond the paper's §5 suite, which
+:mod:`repro.sim.microbench` registers as ``l2_lat`` / ``mixed_stream`` /
+``deepbench``): priority-stream preemption pressure, copy/compute overlap,
+fork-join event chains, bursty Poisson serving arrivals, cache-thrashing
+adversarial pairs, homogeneous MPS-like concurrency, producer-consumer
+pipelines, and stragglers.  Oracle derivations live in each builder's
+docstring and in docs/DESIGN.md ("Scenario catalog & batch runner").
+
+Oracle key convention (per stream name): ``HIT`` / ``MSHR_HIT`` / ``MISS`` /
+``RES_FAIL`` are cumulative end-of-simulation counts summed over access
+types; ``TOTAL`` is ``HIT + MSHR_HIT + MISS`` (successful line touches —
+reservation failures retry, so they are excluded from TOTAL).  An oracle
+asserts only the keys it provides.
+"""
+
+from __future__ import annotations
+
+import copy
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .executor import SimConfig, SimResult, TPUSimulator
+from .kernel_desc import KernelDesc, LINE_SIZE, pointer_chase_trace, streaming_trace
+from repro.core.sinks import ReportSink
+from repro.core.stats import AccessType
+
+__all__ = [
+    "Launch",
+    "ScenarioSpec",
+    "ScenarioInstance",
+    "scenario",
+    "build",
+    "get_spec",
+    "list_scenarios",
+    "DEFAULT_STREAM_NAME",
+]
+
+#: Launch.stream value meaning "the default stream" (id 0, like CUDA's).
+DEFAULT_STREAM_NAME = ""
+
+
+@dataclass(frozen=True)
+class Launch:
+    """One kernel launch row: ``<<<..., stream>>>`` plus event dependencies.
+
+    ``stream`` is a *name*; stream ids are assigned in order of first
+    appearance (the default stream :data:`DEFAULT_STREAM_NAME` is always id
+    0).  ``wait`` / ``record`` are event *labels*, resolved to simulator
+    events on first mention.  ``priority`` applies to the stream at creation
+    (first launch on that stream wins)."""
+
+    stream: str
+    desc: KernelDesc
+    wait: Tuple[str, ...] = ()
+    record: Tuple[str, ...] = ()
+    priority: int = 0
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """Registry entry: builder + defaults + randomization space."""
+
+    name: str
+    builder: Callable
+    defaults: Dict[str, object]
+    #: param -> tuple of candidate values, for randomized/differential tests
+    space: Dict[str, Tuple]
+    doc: str = ""
+
+
+_REGISTRY: Dict[str, ScenarioSpec] = {}
+
+
+def scenario(name: str, *, space: Optional[Dict[str, Tuple]] = None):
+    """Register a scenario builder.
+
+    The builder's keyword defaults become the scenario's default params.  It
+    returns ``(launches, expected)`` or ``(launches, expected, config)``
+    where ``config`` maps :class:`~repro.sim.executor.SimConfig` attribute
+    names to required overrides (e.g. a thrash-sized ``vmem_capacity``).
+    """
+
+    def deco(fn: Callable) -> Callable:
+        import inspect
+
+        if name in _REGISTRY:
+            raise ValueError(f"scenario {name!r} registered twice")
+        defaults = {
+            k: p.default
+            for k, p in inspect.signature(fn).parameters.items()
+            if p.default is not inspect.Parameter.empty
+        }
+        _REGISTRY[name] = ScenarioSpec(
+            name=name,
+            builder=fn,
+            defaults=defaults,
+            space=dict(space or {}),
+            doc=next(iter((fn.__doc__ or "").strip().splitlines()), ""),
+        )
+        return fn
+
+    return deco
+
+
+def list_scenarios() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_spec(name: str) -> ScenarioSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: {', '.join(list_scenarios())}"
+        ) from None
+
+
+def build(name: str, **params) -> "ScenarioInstance":
+    """Instantiate a registered scenario with ``params`` over its defaults."""
+    spec = get_spec(name)
+    unknown = set(params) - set(spec.defaults)
+    if unknown:
+        raise TypeError(f"scenario {name!r} has no params {sorted(unknown)}")
+    merged = dict(spec.defaults)
+    merged.update(params)
+    out = spec.builder(**merged)
+    if len(out) == 2:
+        launches, expected = out
+        config: Dict[str, object] = {}
+    else:
+        launches, expected, config = out
+    return ScenarioInstance(
+        name=name, params=merged, launches=list(launches), expected=expected,
+        config_overrides=dict(config),
+    )
+
+
+@dataclass
+class ScenarioInstance:
+    """A built scenario: launch rows + oracle, runnable on either engine."""
+
+    name: str
+    params: Dict[str, object]
+    launches: List[Launch]
+    #: per-stream-name analytic counts, or None (golden-table scenario)
+    expected: Optional[Dict[str, Dict[str, int]]]
+    config_overrides: Dict[str, object] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        # A stream's priority binds at creation (its first launch row), so a
+        # priority anywhere it cannot take effect — on the pre-existing
+        # default stream, or disagreeing between rows of one stream — would
+        # be silently dropped.  Fail loudly at build time instead.
+        seen: Dict[str, int] = {}
+        for l in self.launches:
+            if l.stream == DEFAULT_STREAM_NAME:
+                if l.priority != 0:
+                    raise ValueError(
+                        f"scenario {self.name!r}: the default stream always has "
+                        "priority 0; use a named stream to set one"
+                    )
+                continue
+            prev = seen.setdefault(l.stream, l.priority)
+            if prev != l.priority:
+                raise ValueError(
+                    f"scenario {self.name!r}: stream {l.stream!r} launches disagree "
+                    f"on priority ({prev} vs {l.priority}); only the first row's "
+                    "value could bind"
+                )
+
+    @property
+    def stream_ids(self) -> Dict[str, int]:
+        """Stream name -> id, mirroring :meth:`run`'s creation order."""
+        ids = {DEFAULT_STREAM_NAME: 0}
+        for l in self.launches:
+            if l.stream not in ids:
+                ids[l.stream] = max(ids.values()) + 1
+        return ids
+
+    def kernels_per_stream(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for l in self.launches:
+            out[l.stream] = out.get(l.stream, 0) + 1
+        return out
+
+    def run(
+        self,
+        engine: Optional[str] = None,
+        config: Optional[SimConfig] = None,
+        sinks: Optional[Sequence[ReportSink]] = None,
+    ) -> SimResult:
+        """Execute on a fresh simulator; scenario config overrides (then
+        ``engine``) are applied on top of ``config``/defaults.  The caller's
+        ``config`` object is never mutated — overrides land on a copy, so one
+        config can seed many scenario runs."""
+        cfg = copy.copy(config) if config is not None else SimConfig()
+        for k, v in self.config_overrides.items():
+            if not hasattr(cfg, k):
+                raise AttributeError(f"scenario {self.name!r} overrides unknown SimConfig.{k}")
+            setattr(cfg, k, v)
+        if engine is not None:
+            cfg.engine = engine
+        sim = TPUSimulator(cfg, sinks=sinks)
+        ids = {DEFAULT_STREAM_NAME: 0}
+        for l in self.launches:
+            if l.stream not in ids:
+                ids[l.stream] = sim.create_stream(l.stream, priority=l.priority).stream_id
+        events: Dict[str, int] = {}
+        for l in self.launches:
+            for label in (*l.wait, *l.record):
+                if label not in events:
+                    events[label] = sim.create_event().event_id
+        for l in self.launches:
+            sim.launch(
+                ids[l.stream],
+                l.desc,
+                wait_events=[events[e] for e in l.wait],
+                record_events=[events[e] for e in l.record],
+            )
+        return sim.run()
+
+
+# --------------------------------------------------------------------------- oracle helpers
+def _lines(n_bytes: int) -> int:
+    return (n_bytes + LINE_SIZE - 1) // LINE_SIZE
+
+
+def _synth(name: str, *, rd: int = 0, wr: int = 0, ici: int = 0, flops: float = 0.0,
+           base: int = 0) -> Tuple[KernelDesc, int]:
+    """An aggregate-cost kernel plus its exact access count: synthesized
+    beats bypass VMEM residency and are classified MISS, so the per-kernel
+    count is ``ceil(rd/line) + ceil(wr/line) + ceil(ici/line)`` regardless of
+    scheduling — the most robust oracle the model offers."""
+    kd = KernelDesc(
+        name=name, flops=flops, hbm_rd_bytes=rd, hbm_wr_bytes=wr, ici_bytes=ici,
+        addr_base=base,
+    )
+    return kd, _lines(rd) + _lines(wr) + _lines(ici)
+
+
+def _miss_only(n: int) -> Dict[str, int]:
+    return {"HIT": 0, "MSHR_HIT": 0, "MISS": n, "RES_FAIL": 0, "TOTAL": n}
+
+
+# --------------------------------------------------------------------------- scenarios
+@scenario("priority_preemption", space={"hi_kernels": (4, 8), "lo_streams": (2, 3),
+                                        "lo_kernels": (2, 4)})
+def priority_preemption(hi_kernels=8, lo_streams=3, lo_kernels=4, kb_per_kernel=32):
+    """Priority-stream preemption pressure: one high-priority stream of many
+    short kernels contends with low-priority streams for the one-per-cycle
+    launch slot; the high-priority stream wins every contended slot
+    (``cudaStreamCreateWithPriority`` idiom).
+
+    Oracle: priorities change *scheduling*, never classification — every
+    kernel is synthesized, so each stream's count is the sum of its kernels'
+    line counts, all MISS.
+    """
+    launches: List[Launch] = []
+    expected: Dict[str, Dict[str, int]] = {}
+    nbytes = kb_per_kernel << 10
+    hi_total = 0
+    for i in range(hi_kernels):
+        kd, n = _synth(f"hi_{i}", rd=nbytes, base=(i + 1) << 22)
+        launches.append(Launch("prio_hi", kd, priority=1))
+        hi_total += n
+    expected["prio_hi"] = _miss_only(hi_total)
+    for s in range(lo_streams):
+        total = 0
+        for i in range(lo_kernels):
+            kd, n = _synth(f"lo{s}_{i}", rd=nbytes, wr=nbytes // 2,
+                           base=(16 + s * lo_kernels + i) << 22)
+            launches.append(Launch(f"prio_lo_{s}", kd))
+            total += n
+        expected[f"prio_lo_{s}"] = _miss_only(total)
+    return launches, expected
+
+
+@scenario("copy_compute_overlap", space={"chunks": (2, 3, 4)})
+def copy_compute_overlap(chunks=4, chunk_kb=256, gemm_flops=2.0e7, out_kb=64):
+    """Copy/compute overlap (double buffering): a copy stream prefetches
+    chunk ``i`` and records an event; the compute stream's GEMM ``i`` waits
+    on it while copy ``i+1`` proceeds concurrently.
+
+    Oracle: both streams are synthesized-cost kernels (copies are straight
+    HBM reads, GEMMs write their outputs), so counts are exact line sums,
+    all MISS; the overlap shows in the timeline, not in the counts.
+    """
+    launches: List[Launch] = []
+    copy_total = compute_total = 0
+    for i in range(chunks):
+        ckd, cn = _synth(f"copy_{i}", rd=chunk_kb << 10, base=(i + 1) << 24)
+        launches.append(Launch("copy", ckd, record=(f"chunk_{i}",)))
+        copy_total += cn
+        gkd, gn = _synth(f"gemm_{i}", wr=out_kb << 10, flops=gemm_flops,
+                         base=(64 + i) << 24)
+        launches.append(Launch("compute", gkd, wait=(f"chunk_{i}",)))
+        compute_total += gn
+    return launches, {"copy": _miss_only(copy_total), "compute": _miss_only(compute_total)}
+
+
+@scenario("fork_join", space={"rounds": (1, 2), "width": (2, 3, 4)})
+def fork_join(rounds=2, width=3, work_kb=64):
+    """Fork-join event dependency chains: per round, a root kernel records an
+    event; ``width`` workers (one stream each) wait on it, run, and record
+    their own; a join kernel waits on all workers (``cudaStreamWaitEvent``
+    fan-in).
+
+    Oracle: all kernels synthesized -> exact per-stream MISS line sums.
+    """
+    launches: List[Launch] = []
+    nbytes = work_kb << 10
+    root_total = join_total = 0
+    worker_total = [0] * width
+    for r in range(rounds):
+        kd, n = _synth(f"fork_{r}", rd=nbytes, base=(r + 1) << 24)
+        launches.append(Launch("fj_root", kd, record=(f"fork_{r}",)))
+        root_total += n
+        for w in range(width):
+            kd, n = _synth(f"work_{r}_{w}", rd=nbytes, wr=nbytes // 2,
+                           base=(8 + r * width + w) << 24)
+            launches.append(
+                Launch(f"fj_worker_{w}", kd, wait=(f"fork_{r}",), record=(f"done_{r}_{w}",))
+            )
+            worker_total[w] += n
+        kd, n = _synth(f"join_{r}", wr=nbytes, base=(64 + r) << 24)
+        launches.append(
+            Launch("fj_join", kd, wait=tuple(f"done_{r}_{w}" for w in range(width)))
+        )
+        join_total += n
+    expected = {"fj_root": _miss_only(root_total), "fj_join": _miss_only(join_total)}
+    for w in range(width):
+        expected[f"fj_worker_{w}"] = _miss_only(worker_total[w])
+    return launches, expected
+
+
+def _poisson_draw(rng: random.Random, lam: float) -> int:
+    """Knuth's Poisson sampler over the scenario's seeded RNG."""
+    limit = math.exp(-lam)
+    k, p = 0, 1.0
+    while True:
+        p *= rng.random()
+        if p <= limit:
+            return k
+        k += 1
+
+
+@scenario("poisson_burst", space={"servers": (2, 3), "bursts": (2, 3), "seed": (0, 1, 7)})
+def poisson_burst(servers=3, bursts=3, lam=2.5, seed=0, req_lines=24):
+    """Bursty serving arrivals: each server stream receives per-burst batches
+    of decode-like requests, batch sizes drawn Poisson(lam) from a seeded RNG
+    (deterministic given ``seed``) — the continuous-batching backlog shape.
+
+    Oracle: request kernels are synthesized reads of
+    ``req_lines + (request index mod 3) * 8`` lines, so each server's count
+    is the (seed-determined) sum over its draws, all MISS.
+    """
+    rng = random.Random(seed)
+    launches: List[Launch] = []
+    expected: Dict[str, Dict[str, int]] = {}
+    totals = [0] * servers
+    for b in range(bursts):
+        for s in range(servers):
+            n_req = 1 + _poisson_draw(rng, lam)  # at least one request per burst
+            for r in range(n_req):
+                lines = req_lines + (r % 3) * 8
+                kd, n = _synth(
+                    f"decode_b{b}_s{s}_r{r}", rd=lines * LINE_SIZE,
+                    base=((b * servers + s) * 64 + r) << 20,
+                )
+                launches.append(Launch(f"server_{s}", kd))
+                totals[s] += n
+    for s in range(servers):
+        expected[f"server_{s}"] = _miss_only(totals[s])
+    return launches, expected
+
+
+@scenario("cache_thrash", space={"arr_lines": (24, 32), "passes": (2, 3)})
+def cache_thrash(arr_lines=32, passes=3):
+    """Cache-thrashing adversarial pair: two dependent-chase streams walk
+    *disjoint* arrays, each half the VMEM working set, repeatedly — together
+    they exceed capacity, so each pass evicts the other stream's lines.
+
+    No closed form: the HIT/MISS split depends on LRU interleaving under
+    concurrency, so this scenario is pinned by a checked-in golden table
+    (``tests/test_scenarios.py``).  Capacity is overridden to
+    ``arr_lines`` total lines (each array alone would fit; the pair cannot).
+    """
+    launches = []
+    for i, name in enumerate(("thrash_a", "thrash_b")):
+        trace = pointer_chase_trace(
+            (i + 1) << 24, arr_lines, load_size=8, stride=LINE_SIZE
+        ) * passes
+        launches.append(Launch(name, KernelDesc(name=name, trace=list(trace), dependent=True)))
+    return launches, None, {"vmem_capacity": arr_lines * LINE_SIZE}
+
+
+@scenario("mps_like", space={"tenants": (2, 3, 4), "kernels_each": (2, 3)})
+def mps_like(tenants=4, kernels_each=3, rd_kb=128, wr_kb=32, flops=1.0e7):
+    """Homogeneous MPS-like concurrency: N identical tenant streams submit
+    identical GEMM-shaped kernels — the fair-sharing sanity case in which
+    every per-stream row must come out equal.
+
+    Oracle: synthesized kernels -> per-tenant MISS =
+    ``kernels_each * (rd_lines + wr_lines)``, identical across tenants.
+    """
+    launches = []
+    per = 0
+    for t in range(tenants):
+        for k in range(kernels_each):
+            kd, n = _synth(f"tenant{t}_k{k}", rd=rd_kb << 10, wr=wr_kb << 10,
+                           flops=flops, base=((t * kernels_each + k) + 1) << 24)
+            launches.append(Launch(f"tenant_{t}", kd))
+            if t == 0:
+                per += n
+    return launches, {f"tenant_{t}": _miss_only(per) for t in range(tenants)}
+
+
+@scenario("producer_consumer", space={"stages": (2, 3, 4)})
+def producer_consumer(stages=3, stage_lines=32, producer_flops=5.0e7):
+    """Producer-consumer pipeline: per stage, a producer writes a region and
+    records an event; the consumer waits on it and reads the same region.
+
+    Oracle: the producer's streaming writes first-touch every line (MISS,
+    write-allocate).  ``producer_flops`` keeps each producer resident well
+    past the HBM round-trip (``compute cycles ~ flops / flops_per_cycle >>
+    hbm_latency``), so by the time its exit event releases the consumer all
+    its lines are installed: the consumer's reads are pure HITs.  Producer
+    MISS = consumer HIT = ``stages * stage_lines``; regions are disjoint and
+    far under capacity, so no evictions perturb this.
+    """
+    launches = []
+    nbytes = stage_lines * LINE_SIZE
+    for s in range(stages):
+        base = (s + 1) << 24
+        launches.append(Launch(
+            "producer",
+            KernelDesc(name=f"produce_{s}",
+                       trace=streaming_trace(base, nbytes, AccessType.GLOBAL_ACC_W),
+                       flops=producer_flops),
+            record=(f"stage_{s}",),
+        ))
+        launches.append(Launch(
+            "consumer",
+            KernelDesc(name=f"consume_{s}",
+                       trace=streaming_trace(base, nbytes, AccessType.GLOBAL_ACC_R)),
+            wait=(f"stage_{s}",),
+        ))
+    total = stages * stage_lines
+    return launches, {
+        "producer": {"HIT": 0, "MSHR_HIT": 0, "MISS": total, "RES_FAIL": 0, "TOTAL": total},
+        "consumer": {"HIT": total, "MSHR_HIT": 0, "MISS": 0, "RES_FAIL": 0, "TOTAL": total},
+    }
+
+
+@scenario("straggler", space={"fast_streams": (2, 3), "short_kernels": (3, 6)})
+def straggler(fast_streams=3, short_kernels=6, short_lines=16, long_lines=2048,
+              slowdown=1.0):
+    """Straggler: one stream runs a single long kernel while the others each
+    run many short ones (the tail-latency shape); optional ``slowdown``
+    additionally throttles the laggard's issue rate
+    (``SimConfig.stream_slowdown``).
+
+    Oracle: all synthesized -> laggard MISS = ``long_lines``; each fast
+    stream MISS = ``short_kernels * short_lines``.  The slowdown stretches
+    the timeline, never the counts.
+    """
+    launches = []
+    kd, n_long = _synth("laggard_k", rd=long_lines * LINE_SIZE, base=1 << 28)
+    launches.append(Launch("laggard", kd))
+    expected = {"laggard": _miss_only(n_long)}
+    for s in range(fast_streams):
+        total = 0
+        for i in range(short_kernels):
+            kd, n = _synth(f"fast{s}_{i}", rd=short_lines * LINE_SIZE,
+                           base=((s * short_kernels + i) + 2) << 20)
+            launches.append(Launch(f"fast_{s}", kd))
+            total += n
+        expected[f"fast_{s}"] = _miss_only(total)
+    config = {}
+    if slowdown != 1.0:
+        config = {"stream_slowdown": {1: float(slowdown)}}  # laggard is stream id 1
+    return launches, expected, config
+
+
+# The paper's §5 validation workloads register themselves on import (their
+# builders live with the descriptor helpers they share with the legacy
+# function API).  Harmless when this module is imported *from* microbench:
+# the decorator above is already defined by this point.
+from . import microbench  # noqa: E402,F401  (registers l2_lat / mixed_stream / deepbench)
