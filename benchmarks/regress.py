@@ -1,0 +1,156 @@
+"""Benchmark regression diff: fresh ``BENCH_*.json`` vs checked-in baselines.
+
+Every benchmark writes its perf trajectory to a repo-root ``BENCH_*.json``
+with one or more recorded **speedup** fields (machine-portable ratios — the
+reason the gates bind on speedups, not wall-clock).  This module compares a
+freshly produced set against a snapshot of the checked-in baselines and
+fails when any recorded speedup regressed by more than ``--tolerance``
+(default 20%):
+
+    python -m benchmarks.regress snapshot --dir /tmp/bench_baseline
+    ... run benchmarks (they overwrite the repo-root JSONs) ...
+    python -m benchmarks.regress check --against /tmp/bench_baseline
+
+Rules:
+
+* every numeric field named ``speedup`` or ``speedup_*`` is tracked,
+  recursively, keyed by its JSON path;
+* files are only compared when both sides exist *and* agree on ``mode``
+  (a ``--quick`` run against a full-tier baseline is apples-to-oranges);
+* a baseline path missing from the fresh file is a failure (a benchmark
+  silently dropping a tracked workload is itself a regression);
+* improvements are reported, never failed.
+
+``benchmarks/run.py`` drives the same snapshot/check pair around its
+benchmark sections, and CI runs it as a dedicated step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+from typing import Dict, Iterator, Tuple
+
+DEFAULT_TOLERANCE = 0.20
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def bench_files(root: str = _REPO_ROOT) -> list:
+    return sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+
+
+def _walk_speedups(obj, path: str = "") -> Iterator[Tuple[str, float]]:
+    if isinstance(obj, dict):
+        for k, v in sorted(obj.items()):
+            sub = f"{path}.{k}" if path else k
+            if (k == "speedup" or k.startswith("speedup_")) and isinstance(
+                v, (int, float)
+            ):
+                yield sub, float(v)
+            else:
+                yield from _walk_speedups(v, sub)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from _walk_speedups(v, f"{path}[{i}]")
+
+
+def extract(path: str) -> Dict[str, object]:
+    with open(path) as f:
+        payload = json.load(f)
+    return {
+        "mode": payload.get("mode"),
+        "speedups": dict(_walk_speedups(payload)),
+    }
+
+
+def snapshot(dest_dir: str, root: str = _REPO_ROOT) -> list:
+    """Copy the current repo-root BENCH files (the checked-in baselines)."""
+    os.makedirs(dest_dir, exist_ok=True)
+    copied = []
+    for path in bench_files(root):
+        shutil.copy2(path, os.path.join(dest_dir, os.path.basename(path)))
+        copied.append(os.path.basename(path))
+    return copied
+
+
+def check(baseline_dir: str, root: str = _REPO_ROOT,
+          tolerance: float = DEFAULT_TOLERANCE) -> dict:
+    """Compare fresh repo-root BENCH files against a snapshot directory."""
+    regressions, improvements, skipped = [], [], []
+    for fresh_path in bench_files(root):
+        name = os.path.basename(fresh_path)
+        base_path = os.path.join(baseline_dir, name)
+        if not os.path.exists(base_path):
+            skipped.append({"file": name, "reason": "no baseline"})
+            continue
+        base = extract(base_path)
+        fresh = extract(fresh_path)
+        if base["mode"] != fresh["mode"]:
+            skipped.append({
+                "file": name,
+                "reason": f"mode mismatch (baseline {base['mode']!r}, "
+                          f"fresh {fresh['mode']!r})",
+            })
+            continue
+        for key, want in sorted(base["speedups"].items()):
+            got = fresh["speedups"].get(key)
+            entry = {"file": name, "path": key, "baseline": want, "fresh": got}
+            if got is None:
+                regressions.append({**entry, "reason": "speedup disappeared"})
+            elif got < want * (1.0 - tolerance):
+                regressions.append({**entry, "reason": f"regressed >{tolerance:.0%}"})
+            elif got > want:
+                improvements.append(entry)
+    return {
+        "ok": not regressions,
+        "tolerance": tolerance,
+        "regressions": regressions,
+        "improvements": improvements,
+        "skipped": skipped,
+    }
+
+
+def print_report(report: dict) -> None:
+    for s in report["skipped"]:
+        print(f"  skip  {s['file']}: {s['reason']}")
+    for i in report["improvements"]:
+        print(f"  ok    {i['file']}:{i['path']} {i['baseline']} -> {i['fresh']}")
+    for r in report["regressions"]:
+        print(
+            f"  FAIL  {r['file']}:{r['path']} baseline={r['baseline']} "
+            f"fresh={r['fresh']} ({r['reason']})",
+            file=sys.stderr,
+        )
+    verdict = "PASS" if report["ok"] else "FAIL"
+    print(f"regression diff: {verdict} "
+          f"({len(report['regressions'])} regressions, "
+          f"{len(report['improvements'])} improvements, "
+          f"{len(report['skipped'])} skipped, "
+          f"tolerance {report['tolerance']:.0%})")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    snap = sub.add_parser("snapshot", help="copy current BENCH_*.json baselines")
+    snap.add_argument("--dir", required=True, help="destination directory")
+    chk = sub.add_parser("check", help="diff fresh BENCH_*.json vs a snapshot")
+    chk.add_argument("--against", required=True, help="snapshot directory")
+    chk.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                     help="max allowed fractional speedup regression")
+    args = ap.parse_args()
+    if args.cmd == "snapshot":
+        copied = snapshot(args.dir)
+        print(f"snapshotted {len(copied)} baseline(s) to {args.dir}: {copied}")
+        return 0
+    report = check(args.against, tolerance=args.tolerance)
+    print_report(report)
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,20 +18,45 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--with-hlo", action="store_true", help="fig5 from a real compiled step")
     ap.add_argument("--artifacts", default="artifacts/dryrun")
+    ap.add_argument("--no-regress", action="store_true",
+                    help="skip the baseline speedup regression diff")
     args = ap.parse_args()
 
     # Sections import lazily, jax-free ones first: the batch runner prefers
     # fork-pool workers, which must be spawned before anything (serving,
     # fig5's compiled-HLO tier) loads jax and its thread pools.
-    from . import batch_speed, fig2_l2lat, fig34_mixed, sim_speed, stats_ingest
+    from . import batch_speed, fig2_l2lat, fig34_mixed, sim_compiled, sim_speed, stats_ingest
+
+    # Fresh section payloads land in a temp dir — never over the checked-in
+    # repo-root baselines (clobbering those with quick-tier payloads would
+    # let a later commit vacuously pass the mode-matched regression gate).
+    import tempfile
+
+    fresh_dir = tempfile.mkdtemp(prefix="bench_fresh_")
+    run_regress = not args.no_regress
+
+    def section(name, payload):
+        # Persist each section's trajectory (to the temp dir, not the repo
+        # root) so the end-of-run regression diff sees the fresh numbers;
+        # mode-mismatched tiers — quick here vs checked-in full — are
+        # skipped by the diff, not compared.
+        import json
+
+        payload["benchmark"] = name
+        with open(os.path.join(fresh_dir, f"BENCH_{name}.json"), "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        results.append((name, payload["ok"]))
 
     results = []
     print("=== StatsEngine: batch ingestion vs per-increment seed path ===")
-    results.append(("stats_ingest", stats_ingest.run()["ok"]))
+    section("stats_ingest", stats_ingest.run())
     print("\n=== Simulator core: event-driven vs cycle-stepped engine ===")
-    results.append(("sim_speed", sim_speed.run(quick=True, repeats=3)["ok"]))
+    section("sim_speed", sim_speed.run(quick=True, repeats=3))
+    print("\n=== Simulator core: compiled trace replay vs event engine ===")
+    section("sim_compiled", sim_compiled.run(quick=True))
     print("\n=== Batch runner: pooled scenario sweep vs serial fallback ===")
-    results.append(("batch_speed", batch_speed.run(quick=True)["ok"]))
+    section("batch_speed", batch_speed.run(quick=True))
     print("\n=== Fig 2: l2_lat 4-stream (tip / clean / serialized) ===")
     results.append(("fig2", fig2_l2lat.run()["ok"]))
     print("\n=== Fig 3: mixed kernels, 1 side stream ===")
@@ -54,6 +79,17 @@ def main() -> None:
         from . import roofline
 
         roofline.run(args.artifacts, md=False)
+
+    if run_regress:
+        print("\n=== Speedup regression diff vs checked-in baselines ===")
+        from . import regress
+
+        # Baselines = the untouched repo-root BENCH files; fresh = this
+        # run's temp-dir payloads.
+        repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        report = regress.check(repo_root, root=fresh_dir)
+        regress.print_report(report)
+        results.append(("regress", report["ok"]))
 
     print("\nsummary:", {k: ("PASS" if v else "FAIL") for k, v in results})
     sys.exit(0 if all(v for _, v in results) else 1)

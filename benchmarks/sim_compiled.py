@@ -1,0 +1,174 @@
+"""Compiled-engine benchmark: 64-draw same-shape registry sweep, vector vs event.
+
+For every registered scenario, a fixed *shape* (scenario + params) is swept
+across ``DRAWS`` value-only Monte-Carlo draws (jittered ``max_cycles`` —
+draws the event engine must re-simulate one by one, and the compiled engine
+may not simulate more than once).  Both sides run through
+:class:`repro.sim.batch.BatchRunner` end-to-end (build + run + payload +
+merge):
+
+* **event** — ``backend="pool"`` serial: one full event-engine simulation
+  per draw (what every sweep paid before the compiled engine);
+* **vector** — ``backend="vector"`` with a **cold** trace cache: one
+  event-loop compile per shape, then lockstep replay of every draw.
+
+Every pair is checked for **bit-identical** results on the full
+:meth:`BatchResult.signature` — per-draw uid-normalized
+``SimResult.signature()`` payloads plus the namespaced merged engine — so
+the recorded speedup can never come from divergent replay.
+
+Writes the trajectory to ``BENCH_sim_compiled.json`` (repo root by default)::
+
+    PYTHONPATH=src python -m benchmarks.sim_compiled            # full tier
+    PYTHONPATH=src python -m benchmarks.sim_compiled --quick    # CI smoke tier
+
+Exit status is non-zero if any pair diverges or the aggregate speedup falls
+under the tier's floor (full: ``TARGET_SPEEDUP`` = the ISSUE-4 acceptance
+gate; quick: a loose smoke floor).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.sim.batch import BatchRunner, same_shape_jobs
+from repro.sim.compiled import TRACE_CACHE
+from repro.sim.scenarios import list_scenarios
+
+from .common import csv_line
+
+#: aggregate vector-vs-event speedup the full tier must reach (CI gate)
+TARGET_SPEEDUP = 25.0
+#: loose floor for the quick smoke tier (small draws amortize less compile)
+QUICK_TARGET_SPEEDUP = 4.0
+#: value-only draws per scenario shape
+DRAWS = 64
+QUICK_DRAWS = 12
+
+# One fixed shape per registered scenario, sized so a single event-engine
+# run is heavy enough that per-draw replay overhead (payload + merge) stays
+# far below it.  _missing() guards that new scenarios get a row here.
+SWEEP = [
+    ("l2_lat", dict(n_loads=8192, n_streams=4)),
+    ("mixed_stream", dict(n=1 << 16)),
+    ("deepbench", dict(repeats=48, n_streams=3)),
+    ("cache_thrash", dict(arr_lines=64, passes=24)),
+    ("producer_consumer", dict(stages=16, stage_lines=192)),
+    ("mps_like", dict(tenants=4, kernels_each=24, rd_kb=2048)),
+    ("poisson_burst", dict(servers=4, bursts=16, seed=0)),
+    ("straggler", dict(long_lines=131072, short_kernels=24)),
+    ("priority_preemption", dict(hi_kernels=24, lo_streams=3, lo_kernels=12,
+                                 kb_per_kernel=1024)),
+    ("copy_compute_overlap", dict(chunks=24, chunk_kb=1024)),
+    ("fork_join", dict(rounds=12, width=4, work_kb=1024)),
+]
+QUICK_SWEEP = [
+    ("l2_lat", dict(n_loads=1024, n_streams=4)),
+    ("mixed_stream", dict(n=1 << 14)),
+    ("producer_consumer", dict(stages=8, stage_lines=128)),
+]
+
+
+def _missing() -> set:
+    return set(list_scenarios()) - {name for name, _ in SWEEP}
+
+
+def bench_shape(name: str, params: dict, draws: int) -> dict:
+    jobs = same_shape_jobs(name, draws, params, engine="event", seed=draws)
+    t0 = time.perf_counter()
+    event = BatchRunner(jobs).run(parallel=False)
+    event_s = time.perf_counter() - t0
+
+    TRACE_CACHE.clear()  # cold cache: the vector wall includes the compile
+    t0 = time.perf_counter()
+    vector = BatchRunner(jobs, backend="vector").run(parallel=False)
+    vector_s = time.perf_counter() - t0
+
+    identical = event.signature() == vector.signature()
+    speedup = event_s / vector_s if vector_s else float("inf")
+    csv_line(
+        f"sim_compiled_{name}",
+        vector_s / draws * 1e6,
+        f"event={event_s*1e3:.0f}ms vector={vector_s*1e3:.0f}ms "
+        f"speedup={speedup:.1f}x identical={identical}",
+    )
+    return {
+        "params": params,
+        "draws": draws,
+        "event_s": round(event_s, 4),
+        "vector_s": round(vector_s, 4),
+        "speedup": round(speedup, 2),
+        "cycles": event.payloads[0]["cycles"],
+        "identical": identical,
+    }
+
+
+def run(quick: bool = False) -> dict:
+    if _missing():
+        raise RuntimeError(
+            f"scenarios missing a benchmark shape: {sorted(_missing())} — "
+            "add rows to benchmarks/sim_compiled.py::SWEEP"
+        )
+    sweep = QUICK_SWEEP if quick else SWEEP
+    draws = QUICK_DRAWS if quick else DRAWS
+    target = QUICK_TARGET_SPEEDUP if quick else TARGET_SPEEDUP
+    shapes = {}
+    for name, params in sweep:
+        shapes[name] = bench_shape(name, params, draws)
+    total_event = sum(s["event_s"] for s in shapes.values())
+    total_vector = sum(s["vector_s"] for s in shapes.values())
+    speedup = total_event / total_vector if total_vector else float("inf")
+    identical = all(s["identical"] for s in shapes.values())
+    ok = identical and speedup >= target
+    csv_line(
+        "sim_compiled_registry",
+        total_vector * 1e6,
+        f"event={total_event:.2f}s vector={total_vector:.2f}s "
+        f"speedup={speedup:.1f}x target>={target} identical={identical}",
+    )
+    return {
+        "ok": ok,
+        "mode": "quick" if quick else "full",
+        "draws_per_shape": draws,
+        "n_shapes": len(sweep),
+        "event_s": round(total_event, 4),
+        "vector_s": round(total_vector, 4),
+        "speedup": round(speedup, 2),
+        "target_speedup": target,
+        "identical": identical,
+        "shapes": shapes,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI smoke tier (fewer shapes/draws)")
+    ap.add_argument(
+        "--out",
+        default=os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                             "BENCH_sim_compiled.json"),
+        help="where to write the JSON trajectory (default: repo root)",
+    )
+    args = ap.parse_args()
+    payload = run(quick=args.quick)
+    payload["benchmark"] = "sim_compiled"
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    if not payload["ok"]:
+        print(
+            "FAIL: replay diverged from the event engine or the speedup fell "
+            f"under {payload['target_speedup']}x",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -124,11 +124,41 @@ def run(verbose: bool = True, n_events: int = N_EVENTS) -> dict:
     )
     return {
         "ok": ok,
+        "mode": "full",
         "identical": identical,
-        "speedup_batch": speedup_batch,
-        "speedup_scalar": speedup_scalar,
+        "n_events": n_events,
+        "seed_s": round(t_seed, 4),
+        "scalar_s": round(t_scalar, 4),
+        "batch_s": round(t_batch, 4),
+        "speedup_batch": round(speedup_batch, 2),
+        "speedup_scalar": round(speedup_scalar, 2),
     }
 
 
+def main() -> int:
+    import argparse
+    import json
+    import os
+    import sys
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out",
+        default=os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                             "BENCH_stats_ingest.json"),
+        help="where to write the JSON trajectory (default: repo root)",
+    )
+    args = ap.parse_args()
+    payload = run()
+    payload["benchmark"] = "stats_ingest"
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0 if payload["ok"] else 1
+
+
 if __name__ == "__main__":
-    run()
+    import sys
+
+    sys.exit(main())

@@ -4,13 +4,17 @@ Two modes:
 
 * ``--mode scenarios`` (default) — fan the whole scenario registry across
   cores with :class:`repro.sim.batch.BatchRunner`: every registered scenario
-  on both engine loops, pooled, with the serial fallback cross-checked
-  bit-identical and every per-stream oracle verified inline.  Writes
+  on the requested engine loops, pooled, with the serial fallback
+  cross-checked bit-identical and every per-stream oracle verified inline.
+  ``--backend vector`` swaps per-job simulation for shape-grouped
+  trace-compile/replay (each distinct shape simulates once; the serial
+  cross-check still re-simulates every job).  Writes
   ``artifacts/sweeps/scenarios.json`` (per-job payloads + the merged
   per-stream matrix signature) and prints the merged multi-run report.
 
     PYTHONPATH=src python scripts/sweep_all.py
     PYTHONPATH=src python scripts/sweep_all.py --workers 8 --engines event
+    PYTHONPATH=src python scripts/sweep_all.py --backend vector
     PYTHONPATH=src python scripts/sweep_all.py --no-verify   # skip serial cross-check
 
 * ``--mode dryrun`` — the legacy XLA dry-run sweep over every
@@ -31,20 +35,25 @@ def sweep_scenarios(args) -> int:
     from repro.sim.batch import BatchRunner, sweep_jobs
 
     engines = tuple(e.strip() for e in args.engines.split(",") if e.strip())
-    if not engines or any(e not in ("cycle", "event") for e in engines):
-        print(f"--engines must name 'cycle' and/or 'event', got {args.engines!r}", file=sys.stderr)
+    if not engines or any(e not in ("cycle", "event", "compiled") for e in engines):
+        print(f"--engines must name 'cycle', 'event' and/or 'compiled', got {args.engines!r}",
+              file=sys.stderr)
         return 2
     jobs = sweep_jobs(engines=engines)
-    print(f"sweeping {len(jobs)} jobs ({len(jobs)//len(engines)} scenarios x {engines})", flush=True)
-    runner = BatchRunner(jobs, workers=args.workers or None)
+    print(f"sweeping {len(jobs)} jobs ({len(jobs)//len(engines)} scenarios x {engines}) "
+          f"via the {args.backend!r} backend", flush=True)
+    runner = BatchRunner(jobs, workers=args.workers or None, backend=args.backend)
     pooled = runner.run(parallel=True)
     print(f"pooled: {pooled.wall_s:.2f}s on {pooled.workers} workers", flush=True)
 
-    # identical stays None (never claimed) when the cross-check is skipped
+    # identical stays None (never claimed) when the cross-check is skipped.
+    # The reference is always the pool backend's serial path — one true
+    # simulation per job — so a vector-backend sweep is cross-checked
+    # against real re-simulation, not against itself.
     identical = None
     serial_s = None
     if not args.no_verify:
-        serial = runner.run(parallel=False)
+        serial = BatchRunner(jobs, workers=args.workers or None).run(parallel=False)
         serial_s = serial.wall_s
         identical = serial.signature() == pooled.signature()
         print(f"serial: {serial.wall_s:.2f}s  bit-identical={identical}", flush=True)
@@ -119,7 +128,11 @@ def sweep_dryrun() -> int:
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mode", choices=("scenarios", "dryrun"), default="scenarios")
-    ap.add_argument("--engines", default="cycle,event", help="comma-separated engine list")
+    ap.add_argument("--engines", default="cycle,event",
+                    help="comma-separated engine list (cycle, event, compiled)")
+    ap.add_argument("--backend", choices=("pool", "vector"), default="pool",
+                    help="pool: one simulation per job; vector: compile each "
+                         "scenario shape once and lockstep-replay its jobs")
     ap.add_argument("--workers", type=int, default=0, help="pool size (default: all cores)")
     ap.add_argument("--no-verify", action="store_true",
                     help="skip the serial cross-check (pooled run only)")

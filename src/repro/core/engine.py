@@ -139,14 +139,21 @@ class StatsEngine:
         self._n_fail = int(n_fail)
         self._capacity = int(capacity)
 
-        # Columnar event buffers (preallocated; flushed when full or on read).
-        self._b_stream = np.zeros(capacity, dtype=np.int64)
-        self._b_type = np.zeros(capacity, dtype=np.int64)
-        self._b_col = np.zeros(capacity, dtype=np.int64)
-        self._b_n = np.zeros(capacity, dtype=np.uint64)
-        self._b_cycle = np.zeros(capacity, dtype=np.int64)
-        self._b_lane = np.zeros(capacity, dtype=np.uint8)
-        self._pos = 0
+        # Columnar staging.  Scalar mutators append to plain Python lists
+        # (one per column — list.append is several times cheaper than a NumPy
+        # scalar setitem, which boxes every value); ``record_batch`` seals the
+        # scalar run and stages its arrays as one chunk.  ``flush`` stitches
+        # the chunks back together in arrival order, so interleaved scalar and
+        # batch ingestion lands exactly as if every event had been appended
+        # one by one (the §5.2 clean emulation is order-sensitive).
+        self._sl_stream: list = []
+        self._sl_type: list = []
+        self._sl_col: list = []
+        self._sl_n: list = []
+        self._sl_cycle: list = []
+        self._sl_lane: list = []
+        self._chunks: list = []  # sealed (sid, at, col, cnt, cyc, lane) arrays
+        self._pos = 0  # staged event count (scalar lists + sealed chunks)
 
         # Dense per-stream blocks, grown by doubling along the stream axis.
         self._s_cap = 0
@@ -166,16 +173,34 @@ class StatsEngine:
 
     # -- mutators: buffered appends ------------------------------------------------
     def _append(self, lane: int, atype: int, col: int, stream_id: int, n: int, cycle: int) -> None:
-        i = self._pos
-        self._b_stream[i] = stream_id
-        self._b_type[i] = atype
-        self._b_col[i] = col
-        self._b_n[i] = n
-        self._b_cycle[i] = cycle
-        self._b_lane[i] = lane
-        self._pos = i + 1
+        self._sl_stream.append(stream_id)
+        self._sl_type.append(atype)
+        self._sl_col.append(col)
+        self._sl_n.append(n)
+        self._sl_cycle.append(cycle)
+        self._sl_lane.append(lane)
+        self._pos += 1
         if self._pos >= self._capacity:
             self.flush()
+
+    def _seal_scalars(self) -> None:
+        """Convert the pending scalar run into one staged array chunk."""
+        if not self._sl_stream:
+            return
+        self._chunks.append((
+            np.array(self._sl_stream, dtype=np.int64),
+            np.array(self._sl_type, dtype=np.int64),
+            np.array(self._sl_col, dtype=np.int64),
+            np.array(self._sl_n, dtype=np.uint64),
+            np.array(self._sl_cycle, dtype=np.int64),
+            np.array(self._sl_lane, dtype=np.uint8),
+        ))
+        self._sl_stream = []
+        self._sl_type = []
+        self._sl_col = []
+        self._sl_n = []
+        self._sl_cycle = []
+        self._sl_lane = []
 
     @staticmethod
     def _encode_cycle(cycle: Optional[int]) -> int:
@@ -284,23 +309,18 @@ class StatsEngine:
             lane = _LANE_FAIL | (_LANE_CLEAN_FAIL if clean else 0)
         else:
             lane = _LANE_CUM | (_LANE_PW if pw else 0) | (_LANE_CLEAN if clean else 0)
+        if m == 0:
+            return
 
-        start = 0
-        while start < m:
-            room = self._capacity - self._pos
-            take = min(room, m - start)
-            i, j = self._pos, self._pos + take
-            s, e = start, start + take
-            self._b_stream[i:j] = sid[s:e]
-            self._b_type[i:j] = at[s:e]
-            self._b_col[i:j] = oc[s:e]
-            self._b_n[i:j] = cnt[s:e]
-            self._b_cycle[i:j] = cyc[s:e]
-            self._b_lane[i:j] = lane
-            self._pos = j
-            start = e
-            if self._pos >= self._capacity:
-                self.flush()
+        self._seal_scalars()
+        # Own copies: the caller may reuse its arrays after this returns.
+        self._chunks.append((
+            sid.copy(), at.copy(), oc.copy(), cnt.copy(), cyc.copy(),
+            np.full(m, lane, dtype=np.uint8),
+        ))
+        self._pos += m
+        if self._pos >= self._capacity:
+            self.flush()
 
     # -- flush: the single-scatter landing ------------------------------------------
     def _ensure_slots(self, stream_ids: np.ndarray) -> None:
@@ -324,20 +344,39 @@ class StatsEngine:
         self._sorted_ids = ids[order]
         self._sorted_slots = slots[order]
 
+    def _on_flush(
+        self,
+        sid: np.ndarray,
+        at: np.ndarray,
+        col: np.ndarray,
+        cnt: np.ndarray,
+        cyc: np.ndarray,
+        lane: np.ndarray,
+    ) -> None:
+        """Hook: observe every flushed event column, in landing order.
+
+        The base engine does nothing; the compiled-trace recorder
+        (:class:`repro.sim.compiled.RecordingStatsEngine`) overrides this to
+        journal the exact event stream the simulation produced."""
+
     def flush(self) -> None:
         """Land every buffered event.  One ``np.add.at`` scatter per store."""
-        m = self._pos
-        if m == 0:
+        if self._pos == 0:
             return
+        self._seal_scalars()
+        chunks = self._chunks
+        if len(chunks) == 1:
+            sid, at, col, cnt, cyc, lane = chunks[0]
+        else:
+            sid = np.concatenate([c[0] for c in chunks])
+            at = np.concatenate([c[1] for c in chunks])
+            col = np.concatenate([c[2] for c in chunks])
+            cnt = np.concatenate([c[3] for c in chunks])
+            cyc = np.concatenate([c[4] for c in chunks])
+            lane = np.concatenate([c[5] for c in chunks])
         self._pos = 0
-        # Views, not copies: nothing can append to the buffers until this
-        # method returns, and the scatter/clean paths never write to them.
-        sid = self._b_stream[:m]
-        at = self._b_type[:m]
-        col = self._b_col[:m]
-        cnt = self._b_n[:m]
-        cyc = self._b_cycle[:m]
-        lane = self._b_lane[:m]
+        self._chunks = []
+        self._on_flush(sid, at, col, cnt, cyc, lane)
 
         self._ensure_slots(np.unique(sid))
         slot = self._sorted_slots[np.searchsorted(self._sorted_ids, sid)]
@@ -469,6 +508,9 @@ class StatsEngine:
 
     def clear(self) -> None:
         self._pos = 0
+        self._chunks = []
+        self._sl_stream, self._sl_type, self._sl_col = [], [], []
+        self._sl_n, self._sl_cycle, self._sl_lane = [], [], []
         self._cum[...] = 0
         self._pw[...] = 0
         self._fail[...] = 0
@@ -500,6 +542,85 @@ class StatsEngine:
             "clean_fail": self._clean_fail.matrix.tolist(),
             "clean_fail_lost": self._clean_fail.lost,
         }
+
+    # -- state snapshot / restore (compiled-trace replay path) ------------------------
+    def state_snapshot(self) -> dict:
+        """Full landed state as one picklable dict: constructor geometry,
+        stream-slot mapping, the dense tip stores (trimmed to live slots),
+        and both clean lanes including their §5.2 carry arrays.  Restoring a
+        snapshot (:meth:`from_snapshot`) is bit-equivalent to replaying the
+        exact event stream that produced it — proven against the journal
+        replay in ``tests/test_sim_compiled.py``."""
+        self.flush()
+        n = len(self._slots)
+        return {
+            "name": self.name,
+            "n_types": self._n_types,
+            "n_outcomes": self._n_outcomes,
+            "n_fail": self._n_fail,
+            "clean_fail_cols": self._clean_fail.matrix.shape[1],
+            "slots": dict(self._slots),
+            "cum": self._cum[:n].copy(),
+            "pw": self._pw[:n].copy(),
+            "fail": self._fail[:n].copy(),
+            "clean": self._clean_state_snapshot(self._clean),
+            "clean_fail": self._clean_state_snapshot(self._clean_fail),
+        }
+
+    @staticmethod
+    def _clean_state_snapshot(state: _CleanState) -> dict:
+        return {
+            "matrix": state.matrix.copy(),
+            "last_cycle": state.last_cycle.copy(),
+            "last_stream": state.last_stream.copy(),
+            "valid": state.valid.copy(),
+            "lost": state.lost,
+        }
+
+    def state_restore(self, snap: dict) -> None:
+        """Load a :meth:`state_snapshot` — a vectorized block copy, replacing
+        whatever this engine held.  Geometry (type/outcome/fail axes) must
+        match the snapshot's."""
+        if (snap["n_types"], snap["n_outcomes"], snap["n_fail"]) != (
+            self._n_types, self._n_outcomes, self._n_fail,
+        ) or snap["clean_fail_cols"] != self._clean_fail.matrix.shape[1]:
+            raise ValueError("state_restore: snapshot geometry mismatch")
+        self.clear()
+        slots = snap["slots"]
+        n = len(slots)
+        if n:
+            # Snapshot slots are dense 0..n-1 in arrival order — adopt the
+            # dense blocks and the mapping wholesale (no re-slotting).
+            self._slots = dict(slots)
+            self._cum = snap["cum"].copy()
+            self._pw = snap["pw"].copy()
+            self._fail = snap["fail"].copy()
+            self._s_cap = n
+            ids = np.fromiter(slots.keys(), dtype=np.int64, count=n)
+            sl = np.fromiter(slots.values(), dtype=np.int64, count=n)
+            order = np.argsort(ids)
+            self._sorted_ids = ids[order]
+            self._sorted_slots = sl[order]
+        for state, key in ((self._clean, "clean"), (self._clean_fail, "clean_fail")):
+            s = snap[key]
+            state.matrix[...] = s["matrix"]
+            state.last_cycle[...] = s["last_cycle"]
+            state.last_stream[...] = s["last_stream"]
+            state.valid[...] = s["valid"]
+            state.lost = s["lost"]
+
+    @classmethod
+    def from_snapshot(cls, snap: dict) -> "StatsEngine":
+        """Fresh engine materialized from a :meth:`state_snapshot`."""
+        eng = cls(
+            n_types=snap["n_types"],
+            n_outcomes=snap["n_outcomes"],
+            n_fail=snap["n_fail"],
+            name=snap["name"],
+            clean_fail_cols=snap["clean_fail_cols"],
+        )
+        eng.state_restore(snap)
+        return eng
 
     # -- interop ---------------------------------------------------------------------
     def as_stat_table(self) -> StatTable:

@@ -185,6 +185,32 @@ class StreamManager:
             if ev is not None:
                 ev.fired = True
 
+    def structure(self, payload_key: Optional[Callable[[object], object]] = None) -> Tuple:
+        """Canonical structural digest of the whole launch graph: per stream
+        (in id order) its priority and queued work rows — name, wait/record
+        event ids, and ``payload_key(payload)`` (hashable; identity default).
+
+        Two managers with equal structures enqueue *the same simulation*:
+        stream ids, priorities, FIFO order, event wiring, and in-flight state
+        (launched/done flags, fired events, busy streams) all appear, while
+        run-varying identifiers (work uids, stream display names) do not.
+        The compiled-trace engine keys its shape cache on this."""
+        key = payload_key if payload_key is not None else (lambda p: p)
+        streams = tuple(
+            (
+                sid,
+                self._streams[sid].priority,
+                tuple(
+                    (w.name, w.wait_events, w.record_events, w.launched, w.done,
+                     key(w.payload))
+                    for w in self._queues[sid]
+                ),
+            )
+            for sid in sorted(self._queues)
+        )
+        fired = tuple(sorted(e for e, ev in self._events.items() if ev.fired))
+        return (streams, fired, tuple(self._busy_streams))
+
     # -- queries ---------------------------------------------------------------
     def pending(self) -> int:
         return sum(1 for q in self._queues.values() for w in q if not w.done)

@@ -128,6 +128,20 @@ class KernelTimeline:
         rows.sort()
         return (tuple(rows), self.last_streamID, self.last_uid)
 
+    @classmethod
+    def from_state(cls, state: Tuple) -> "KernelTimeline":
+        """Rebuild a timeline from a :meth:`state` snapshot (the compiled
+        engine's replay path).  ``from_state(t.state()).state() == t.state()``
+        for every timeline ``t``."""
+        rows, last_sid, last_uid = state
+        tl = cls()
+        for sid, uid, start, end, name in rows:
+            per_stream = tl.gpu_kernel_time.setdefault(sid, {})
+            per_stream[uid] = KernelTime(start_cycle=start, end_cycle=end, name=name)
+        tl.last_streamID = last_sid
+        tl.last_uid = last_uid
+        return tl
+
     def makespan(self) -> int:
         ivs = self.intervals()
         if not ivs:

@@ -29,6 +29,14 @@ Merging is deterministic and order-independent:
     result = BatchRunner(jobs, workers=8).run()    # or .run(parallel=False)
     result.merged.aggregate()                      # one engine, all runs
     result.emit([TextSink(sys.stdout)])            # merged multi-run report
+
+``backend="vector"`` swaps the one-simulation-per-job strategy for
+shape-grouped trace-compile/replay (:mod:`repro.sim.compiled`): jobs sharing
+a scenario *shape* (same scenario, params, engine tag and structural config
+— see :meth:`BatchJob.group_key`) simulate **once** and replay per draw in
+lockstep, while distinct shapes still fan out over the pool.  Both backends
+produce bit-identical :meth:`BatchResult.signature` payloads — asserted by
+``tests/test_sim_compiled.py`` and gated by ``benchmarks/sim_compiled.py``.
 """
 
 from __future__ import annotations
@@ -44,26 +52,69 @@ from repro.core.collector import namespace_stream, split_namespaced
 from repro.core.engine import StatsEngine
 from repro.core.sinks import ReportSink, merged_report
 from repro.core.stats import AccessOutcome
+from .executor import SimConfig, VALUE_ONLY_CONFIG
 from .scenarios import ScenarioInstance, build, get_spec, list_scenarios
 
-__all__ = ["BatchJob", "BatchResult", "BatchRunner", "sweep_jobs", "run_job"]
+__all__ = [
+    "BatchJob", "BatchResult", "BatchRunner", "sweep_jobs", "run_job",
+    "run_vector_group", "same_shape_jobs",
+]
+
+
+def _hashable(v: object) -> object:
+    return tuple(sorted(v.items())) if isinstance(v, dict) else v
 
 
 @dataclass(frozen=True)
 class BatchJob:
-    """One unit of batch work: a scenario instantiation on one engine."""
+    """One unit of batch work: a scenario instantiation on one engine.
+
+    ``config`` optionally overrides :class:`~repro.sim.executor.SimConfig`
+    fields for this job (e.g. a Monte-Carlo ``max_cycles`` draw, or a
+    structural knob like ``hbm_latency``).  Dict-valued overrides
+    (``stream_slowdown``) are canonicalized to sorted item tuples so jobs
+    stay hashable."""
 
     scenario: str
     params: Tuple[Tuple[str, object], ...] = ()
     engine: str = "event"
+    config: Tuple[Tuple[str, object], ...] = ()
 
     @classmethod
     def make(cls, scenario: str, params: Optional[Mapping[str, object]] = None,
-             engine: str = "event") -> "BatchJob":
-        return cls(scenario, tuple(sorted((params or {}).items())), engine)
+             engine: str = "event",
+             config: Optional[Mapping[str, object]] = None) -> "BatchJob":
+        return cls(
+            scenario,
+            tuple(sorted((params or {}).items())),
+            engine,
+            tuple(sorted((k, _hashable(v)) for k, v in (config or {}).items())),
+        )
 
     def kwargs(self) -> Dict[str, object]:
         return dict(self.params)
+
+    def sim_config(self) -> SimConfig:
+        """A fresh :class:`SimConfig` with this job's overrides applied."""
+        cfg = SimConfig()
+        for k, v in self.config:
+            if not hasattr(cfg, k):
+                raise AttributeError(f"job overrides unknown SimConfig.{k}")
+            setattr(cfg, k, dict(v) if k == "stream_slowdown" else v)
+        return cfg
+
+    def group_key(self) -> Tuple:
+        """The job's scenario *shape*: everything that can change what its
+        simulation does — scenario, params, engine tag, and the structural
+        ``SimConfig`` overrides.  Jobs differing only in
+        :data:`~repro.sim.executor.VALUE_ONLY_CONFIG` fields share a group,
+        and the vector backend simulates each group exactly once."""
+        return (
+            self.scenario,
+            self.params,
+            self.engine,
+            tuple((k, v) for k, v in self.config if k not in VALUE_ONLY_CONFIG),
+        )
 
 
 def _oracle_check(inst: ScenarioInstance, res) -> Optional[Dict[str, object]]:
@@ -89,6 +140,20 @@ def _oracle_check(inst: ScenarioInstance, res) -> Optional[Dict[str, object]]:
     return {"ok": not mismatches, "mismatches": mismatches}
 
 
+def _payload(job: BatchJob, inst: ScenarioInstance, res) -> Dict[str, object]:
+    """Flatten one run into the plain-structure worker payload."""
+    return {
+        "scenario": job.scenario,
+        "params": job.kwargs(),
+        "engine": job.engine,
+        "config": {k: dict(v) if k == "stream_slowdown" else v for k, v in job.config},
+        "cycles": res.cycles,
+        "stream_ids": dict(inst.stream_ids),
+        "oracle": _oracle_check(inst, res),
+        "signature": res.signature(),
+    }
+
+
 def run_job(job: BatchJob) -> Dict[str, object]:
     """Worker body (also the serial fallback): build, run, flatten.
 
@@ -96,16 +161,29 @@ def run_job(job: BatchJob) -> Dict[str, object]:
     sweeps, signatures) consumes this payload, never live simulator state.
     """
     inst = build(job.scenario, **job.kwargs())
-    res = inst.run(engine=job.engine)
-    return {
-        "scenario": job.scenario,
-        "params": job.kwargs(),
-        "engine": job.engine,
-        "cycles": res.cycles,
-        "stream_ids": dict(inst.stream_ids),
-        "oracle": _oracle_check(inst, res),
-        "signature": res.signature(),
-    }
+    res = inst.run(engine=job.engine, config=job.sim_config())
+    return _payload(job, inst, res)
+
+
+def run_vector_group(jobs: Sequence[BatchJob]) -> List[Dict[str, object]]:
+    """Worker body for one same-shape group under ``backend="vector"``.
+
+    The scenario builds **once**, its shape compiles **once** (via the
+    event loop + :mod:`repro.sim.compiled` recorder — or not at all on a
+    warm :data:`~repro.sim.compiled.TRACE_CACHE`), and every job in the
+    group replays the trace in lockstep (:func:`repro.sim.compiled
+    .replay_batch`).  Payloads are per-job and independently materialized —
+    bit-identical to what :func:`run_job` would have produced, which the
+    pooled==serial cross-checks assert."""
+    from .compiled import get_or_compile, replay_batch
+
+    rep = jobs[0]
+    inst = build(rep.scenario, **rep.kwargs())
+    sim = inst.make_sim(engine="event", config=rep.sim_config())
+    trace, _ = get_or_compile(sim)
+    cfgs = [j.sim_config() for j in jobs]
+    results = replay_batch(trace, cfgs)
+    return [_payload(j, inst, r) for j, r in zip(jobs, results)]
 
 
 def merge_payloads(payloads: Sequence[Mapping[str, object]]) -> StatsEngine:
@@ -232,26 +310,79 @@ def _pool_context():
 class BatchRunner:
     """Shards :class:`BatchJob` lists across a process pool and merges.
 
-    ``run(parallel=False)`` is the serial fallback: same worker body, same
-    job order, same merge — proven bit-identical to the pooled path via
-    :meth:`BatchResult.signature` equality."""
+    Two backends:
 
-    def __init__(self, jobs: Iterable[BatchJob], workers: Optional[int] = None) -> None:
+    * ``backend="pool"`` (default) — one simulation per job.  The pooled
+      path orders jobs shape-grouped (same-shape jobs land in the same pool
+      chunk) and maps with an explicit ``chunksize`` so small-job sweeps
+      stop paying one IPC round-trip per job; payloads are restored to job
+      order before merging, so the pooled and serial paths stay
+      bit-identical.
+    * ``backend="vector"`` — shape-grouped trace-compile/replay: each
+      distinct shape simulates once (the compiled engine's phase 1) and all
+      its jobs replay in lockstep (phase 2).  Cross-shape groups still fan
+      out over the pool when ``parallel=True`` — the shape-grouped-sharding
+      composition.
+
+    ``run(parallel=False)`` is the serial fallback: same worker bodies, same
+    job order, same merge — proven bit-identical to the pooled path (and
+    across backends) via :meth:`BatchResult.signature` equality."""
+
+    def __init__(self, jobs: Iterable[BatchJob], workers: Optional[int] = None,
+                 backend: str = "pool") -> None:
         self.jobs = list(jobs)
         if not self.jobs:
             raise ValueError("BatchRunner needs at least one job")
+        if backend not in ("pool", "vector"):
+            raise ValueError(f"unknown backend {backend!r} (want 'pool' or 'vector')")
+        self.backend = backend
         cpus = mp.cpu_count()
         self.workers = max(1, min(workers if workers is not None else cpus,
                                   len(self.jobs), cpus))
 
+    def _shape_groups(self) -> List[List[int]]:
+        """Job indices grouped by shape, groups in first-occurrence order."""
+        groups: Dict[Tuple, List[int]] = {}
+        for i, job in enumerate(self.jobs):
+            groups.setdefault(job.group_key(), []).append(i)
+        return list(groups.values())
+
+    def _run_pool(self, use_pool: bool) -> List[Dict[str, object]]:
+        jobs = self.jobs
+        if not use_pool:
+            return [run_job(j) for j in jobs]
+        # Shape-grouped order: one chunk tends to hold one shape's jobs, so
+        # a worker's trace/descriptor caches stay warm within a chunk.
+        order = [i for grp in self._shape_groups() for i in grp]
+        chunksize = max(1, (len(jobs) + 4 * self.workers - 1) // (4 * self.workers))
+        with _pool_context().Pool(self.workers) as pool:
+            mapped = pool.map(run_job, [jobs[i] for i in order], chunksize=chunksize)
+        payloads: List[Optional[Dict[str, object]]] = [None] * len(jobs)
+        for i, p in zip(order, mapped):
+            payloads[i] = p
+        return payloads  # type: ignore[return-value]
+
+    def _run_vector(self, use_pool: bool) -> List[Dict[str, object]]:
+        groups = self._shape_groups()
+        group_jobs = [[self.jobs[i] for i in grp] for grp in groups]
+        if use_pool and len(groups) > 1:
+            with _pool_context().Pool(min(self.workers, len(groups))) as pool:
+                per_group = pool.map(run_vector_group, group_jobs, chunksize=1)
+        else:
+            per_group = [run_vector_group(g) for g in group_jobs]
+        payloads: List[Optional[Dict[str, object]]] = [None] * len(self.jobs)
+        for grp, outs in zip(groups, per_group):
+            for i, p in zip(grp, outs):
+                payloads[i] = p
+        return payloads  # type: ignore[return-value]
+
     def run(self, parallel: bool = True) -> BatchResult:
         t0 = time.perf_counter()
         use_pool = parallel and self.workers > 1 and len(self.jobs) > 1
-        if use_pool:
-            with _pool_context().Pool(self.workers) as pool:
-                payloads = pool.map(run_job, self.jobs)
+        if self.backend == "vector":
+            payloads = self._run_vector(use_pool)
         else:
-            payloads = [run_job(j) for j in self.jobs]
+            payloads = self._run_pool(use_pool)
         merged = merge_payloads(payloads)
         return BatchResult(
             jobs=list(self.jobs),
@@ -279,4 +410,26 @@ def sweep_jobs(
         BatchJob.make(n, (params or {}).get(n), engine=e)
         for n in names
         for e in engines
+    ]
+
+
+def same_shape_jobs(
+    scenario: str,
+    n_draws: int,
+    params: Optional[Mapping[str, object]] = None,
+    engine: str = "event",
+    seed: int = 0,
+) -> List[BatchJob]:
+    """``n_draws`` jobs of one scenario shape, differing only in value-only
+    ``SimConfig`` draws (jittered ``max_cycles`` — see
+    :func:`repro.sim.scenarios.value_only_draws`).  Under ``backend="pool"``
+    every draw re-simulates; under ``backend="vector"`` the shape compiles
+    once and every draw replays — the sweep the compiled-engine benchmark
+    measures."""
+    from .scenarios import value_only_draws
+
+    get_spec(scenario)
+    return [
+        BatchJob.make(scenario, params, engine=engine, config=cfg)
+        for cfg in value_only_draws(n_draws, seed=seed)
     ]

@@ -1,6 +1,6 @@
 """Simulator executor: concurrent streams over shared TPU resources.
 
-This is the GPGPU-Sim analog.  Two interchangeable main loops drive it:
+This is the GPGPU-Sim analog.  Three interchangeable main loops drive it:
 
 * ``SimConfig.engine="cycle"`` — the reference cycle-stepped loop: one Python
   iteration per simulated cycle (tick cache, scan launchables, issue, retire).
@@ -13,6 +13,11 @@ This is the GPGPU-Sim analog.  Two interchangeable main loops drive it:
   clean / failure stats, same report text — because it provably visits every
   cycle on which the cycle loop would have changed state (see
   docs/DESIGN.md, "Event-driven scheduler").
+* ``SimConfig.engine="compiled"`` — trace-compile/replay
+  (:mod:`repro.sim.compiled`): the first run of a scenario *shape* executes
+  the event loop once under a recording stat engine; every further run of
+  that shape replays the recorded trace without simulating, still
+  bit-identical (docs/DESIGN.md, "Trace compilation & lockstep replay").
 
 It drives **three stat views in one pass**,
 which is how we reproduce the paper's three builds from a single binary:
@@ -49,7 +54,7 @@ from repro.core.timeline import KernelTimeline
 from .kernel_desc import Access, KernelDesc, LINE_SIZE
 from .resources import Bandwidth, CacheDecision, Compute, HW_V5E, VMEMCache
 
-__all__ = ["SimConfig", "TPUSimulator", "SimResult"]
+__all__ = ["SimConfig", "TPUSimulator", "SimResult", "VALUE_ONLY_CONFIG"]
 
 # Hot-path constants (module-level lookups are cheaper than enum attribute
 # access inside the per-access inner loops).
@@ -83,10 +88,31 @@ class SimConfig:
     max_synth_beats: int = 4096  # beat granularity for aggregate-cost kernels
     #: straggler injection: stream_id -> slowdown factor (>1 = slower)
     stream_slowdown: Dict[int, float] = field(default_factory=dict)
-    #: main-loop implementation: "event" (cycle-skipping, default) or "cycle"
-    #: (reference cycle-stepped loop).  Results are bit-identical.
+    #: main-loop implementation: "event" (cycle-skipping, default), "cycle"
+    #: (reference cycle-stepped loop), or "compiled" (trace-compile/replay:
+    #: the event loop runs once per scenario *shape* and every further run of
+    #: that shape replays the recorded trace — see repro/sim/compiled.py).
+    #: Results are bit-identical across all three.
     engine: str = "event"
     verbose: bool = False
+
+    def structural_key(self) -> Tuple:
+        """The config fields that can change what a simulation *does* — the
+        shape-defining part of the compiled engine's cache key.  Fields in
+        :data:`VALUE_ONLY_CONFIG` are excluded: they never alter the event
+        sequence of a completing run (``max_cycles`` only guards against
+        non-termination — replay re-checks it — and ``verbose`` only mirrors
+        the log to stdout), so runs differing only there replay one trace."""
+        return tuple(
+            tuple(sorted(v.items())) if isinstance(v, dict) else v
+            for f, v in sorted(self.__dict__.items())
+            if f not in VALUE_ONLY_CONFIG and f != "engine"
+        )
+
+
+#: SimConfig fields that never change a completing simulation's event
+#: sequence; a change here invalidates nothing in the compiled-trace cache.
+VALUE_ONLY_CONFIG = frozenset({"max_cycles", "verbose"})
 
 
 _UID_IN_LOG = re.compile(r"uid[ =:]+\d+")
@@ -285,6 +311,9 @@ class TPUSimulator:
         self.streams = StreamManager()
         # One engine drives all three stat views (tip / per-window / clean):
         # events buffer in columnar form and land via vectorized scatters.
+        # The compiled-trace compiler swaps in its RecordingStatsEngine by
+        # reassigning this attribute (and the three view aliases below)
+        # before the first event lands — see repro.sim.compiled._compile.
         self.engine = StatsEngine(
             name="Total_core_cache_stats",
             clean_fail_cols=max(AccessOutcome.count(), 8),
@@ -341,8 +370,15 @@ class TPUSimulator:
             self._run_cycle()
         elif self.cfg.engine == "event":
             self._run_event()
+        elif self.cfg.engine == "compiled":
+            from .compiled import run_compiled  # deferred: compiled imports us
+
+            return run_compiled(self)
         else:
-            raise ValueError(f"unknown SimConfig.engine {self.cfg.engine!r} (want 'cycle' or 'event')")
+            raise ValueError(
+                f"unknown SimConfig.engine {self.cfg.engine!r} "
+                "(want 'cycle', 'event' or 'compiled')"
+            )
         return SimResult(
             cycles=self._cycle,
             stats=self.stats,

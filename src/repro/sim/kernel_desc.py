@@ -20,6 +20,8 @@ import itertools
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.stats import AccessType
 
 __all__ = ["Access", "KernelDesc", "LINE_SIZE"]
@@ -73,9 +75,42 @@ class KernelDesc:
     #: cached here so repeated simulations of one descriptor skip the trace
     #: walk (keyed by line size; invalid if ``trace`` is mutated after use).
     ff_cache: Optional[Tuple] = field(default=None, repr=False, compare=False)
+    #: memoized :meth:`structural_key` (invalid if ``trace`` is mutated).
+    _skey: Optional[Tuple] = field(default=None, repr=False, compare=False)
 
     def total_trace_accesses(self) -> int:
         return len(self.trace) if self.trace else 0
+
+    def structural_key(self) -> Tuple:
+        """Everything that determines this kernel's simulated behaviour —
+        and nothing run-varying (``uid`` is excluded; two descriptors with
+        equal keys simulate identically modulo uid digits, which
+        ``SimResult.signature()`` already normalizes).  The trace collapses
+        to a sha256 digest over its packed ``(atype, addr, size)`` rows:
+        Python tuples do not cache their hash, so keeping the raw trace in
+        the key would re-hash thousands of rows on every trace-cache lookup.
+        Memoized: scenario instances reuse descriptors across runs, so the
+        trace walk is paid once."""
+        if self._skey is None:
+            if self.trace is None:
+                trace_digest = None
+            else:
+                import hashlib
+
+                rows = np.asarray(
+                    [(int(a.atype), a.addr, a.size) for a in self.trace],
+                    dtype=np.int64,
+                ).reshape(len(self.trace), 3)
+                trace_digest = (
+                    len(self.trace),
+                    hashlib.sha256(rows.tobytes()).hexdigest(),
+                )
+            self._skey = (
+                self.name, self.flops, trace_digest, self.hbm_rd_bytes,
+                self.hbm_wr_bytes, self.ici_bytes, self.addr_base,
+                self.dependent, self.issue_width,
+            )
+        return self._skey
 
     def synthesized_lines(self, line_size: int = LINE_SIZE) -> Tuple[int, int, int]:
         """(#read lines, #write lines, #ici lines) for aggregate-cost kernels."""

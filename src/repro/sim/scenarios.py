@@ -60,6 +60,8 @@ __all__ = [
     "build",
     "get_spec",
     "list_scenarios",
+    "space_draws",
+    "value_only_draws",
     "DEFAULT_STREAM_NAME",
 ]
 
@@ -211,16 +213,19 @@ class ScenarioInstance:
             out[l.stream] = out.get(l.stream, 0) + 1
         return out
 
-    def run(
+    def make_sim(
         self,
         engine: Optional[str] = None,
         config: Optional[SimConfig] = None,
         sinks: Optional[Sequence[ReportSink]] = None,
-    ) -> SimResult:
-        """Execute on a fresh simulator; scenario config overrides (then
-        ``engine``) are applied on top of ``config``/defaults.  The caller's
-        ``config`` object is never mutated — overrides land on a copy, so one
-        config can seed many scenario runs."""
+    ) -> TPUSimulator:
+        """A fresh, fully-enqueued simulator for this scenario (streams
+        created, events wired, kernels launched — ready to ``run()``).
+        Scenario config overrides (then ``engine``) are applied on top of
+        ``config``/defaults.  The caller's ``config`` object is never mutated
+        — overrides land on a copy, so one config can seed many scenario
+        runs.  The compiled-trace batch backend uses this to compile a shape
+        without immediately running it."""
         cfg = copy.copy(config) if config is not None else SimConfig()
         for k, v in self.config_overrides.items():
             if not hasattr(cfg, k):
@@ -245,7 +250,45 @@ class ScenarioInstance:
                 wait_events=[events[e] for e in l.wait],
                 record_events=[events[e] for e in l.record],
             )
-        return sim.run()
+        return sim
+
+    def run(
+        self,
+        engine: Optional[str] = None,
+        config: Optional[SimConfig] = None,
+        sinks: Optional[Sequence[ReportSink]] = None,
+    ) -> SimResult:
+        """Execute on a fresh simulator (see :meth:`make_sim`)."""
+        return self.make_sim(engine=engine, config=config, sinks=sinks).run()
+
+
+# --------------------------------------------------------------------------- sweep helpers
+def space_draws(name: str, k: int, seed: int = 0) -> List[Dict[str, object]]:
+    """``k`` randomized param draws from a scenario's declared ``space`` —
+    the differential suites' sampling helper.  Each draw picks one candidate
+    per space axis with a seeded RNG; draws are full param dicts over the
+    scenario defaults.  Distinct draws are distinct *shapes*: every scenario
+    param can change the launch structure, so the compiled engine recompiles
+    per draw (value-only variation lives in ``SimConfig`` — see
+    ``repro.sim.executor.VALUE_ONLY_CONFIG``)."""
+    spec = get_spec(name)
+    rng = random.Random(seed)
+    keys = sorted(spec.space)
+    return [{key: rng.choice(spec.space[key]) for key in keys} for _ in range(k)]
+
+
+def value_only_draws(k: int, seed: int = 0,
+                     base_max_cycles: int = 50_000_000) -> List[Dict[str, object]]:
+    """``k`` randomized *value-only* ``SimConfig`` override dicts (jittered
+    ``max_cycles``) — draws that share one scenario shape by construction,
+    so a same-shape sweep compiles once and replays ``k`` times.  This is
+    the benchmark's Monte-Carlo axis: the event engine must re-simulate
+    every draw, the compiled engine must not."""
+    rng = random.Random(seed)
+    return [
+        {"max_cycles": base_max_cycles + rng.randrange(1 << 20)}
+        for _ in range(k)
+    ]
 
 
 # --------------------------------------------------------------------------- oracle helpers

@@ -85,6 +85,34 @@ class TestBatchRunner:
         result = BatchRunner(SMALL_SWEEP, workers=2).run(parallel=True)
         assert [p["scenario"] for p in result.payloads] == [j.scenario for j in SMALL_SWEEP]
 
+    def test_pooled_chunked_shape_grouped_order_restored(self):
+        """The pooled path reorders jobs shape-grouped and maps with a
+        chunksize; payloads must come back in job order and bit-identical to
+        serial even with interleaved duplicate shapes."""
+        jobs = [
+            SMALL_SWEEP[0], SMALL_SWEEP[1], SMALL_SWEEP[0], SMALL_SWEEP[2],
+            SMALL_SWEEP[1], SMALL_SWEEP[0],
+        ]
+        runner = BatchRunner(jobs, workers=2)
+        serial = runner.run(parallel=False)
+        pooled = runner.run(parallel=True)
+        assert serial.signature() == pooled.signature()
+        assert [p["scenario"] for p in pooled.payloads] == [j.scenario for j in jobs]
+
+    def test_pooled_with_config_overrides(self):
+        jobs = [
+            BatchJob.make("l2_lat", dict(n_loads=64, n_streams=2),
+                          config=dict(max_cycles=9_999_999)),
+            BatchJob.make("l2_lat", dict(n_loads=64, n_streams=2),
+                          config=dict(hbm_latency=60)),
+        ]
+        runner = BatchRunner(jobs, workers=2)
+        serial = runner.run(parallel=False)
+        pooled = runner.run(parallel=True)
+        assert serial.signature() == pooled.signature()
+        # structural override actually changed the simulation
+        assert serial.payloads[0]["cycles"] != serial.payloads[1]["cycles"]
+
     def test_empty_jobs_rejected(self):
         with pytest.raises(ValueError, match="at least one job"):
             BatchRunner([])

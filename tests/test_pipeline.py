@@ -9,14 +9,18 @@ ENV = {
     "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
     "HOME": os.environ.get("HOME", "/root"),
     "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+    # Force the host backend: with a libtpu wheel present but no TPU attached,
+    # backend autodetection hangs for minutes before falling back.
+    "JAX_PLATFORMS": "cpu",
 }
 
 CODE = """
 import jax, jax.numpy as jnp, numpy as np
 from repro.train.pipeline import pipeline_forward, split_stages
 
-mesh = jax.make_mesh((4, 2), ("stage", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+# jax.make_mesh grew its axis_types kwarg after the pinned 0.4.x line; plain
+# Auto axes are that version's default, so the two-arg call is equivalent.
+mesh = jax.make_mesh((4, 2), ("stage", "data"))
 
 L, D, M, MB = 8, 16, 6, 4
 key = jax.random.PRNGKey(0)

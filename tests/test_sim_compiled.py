@@ -1,0 +1,368 @@
+"""Compiled-trace engine: tri-engine identity, cache invalidation, lockstep.
+
+The contract under test (ISSUE 4):
+
+* ``cycle.sig == event.sig == compiled.sig`` for every registered scenario —
+  at defaults, over randomized draws from each scenario's declared space,
+  and under hypothesis;
+* the trace cache recompiles on *shape* changes and replays on *value-only*
+  changes (``max_cycles``/``verbose``), with the replay still bit-identical;
+* a snapshot-restored stat engine equals landing the recorded journal
+  segment-by-segment through ``record_batch`` (the identity argument for
+  the fast replay path);
+* ``replay_batch`` materializes independent per-run results whose lockstep
+  resource columns match the compile run's final counters;
+* ``BatchRunner(backend="vector")`` is bit-identical to the serial pool
+  path, simulating each shape exactly once.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.sim import KernelDesc, SimConfig, TPUSimulator, l2_lat_multistream, pointer_chase_trace
+from repro.sim.batch import BatchJob, BatchRunner, same_shape_jobs, sweep_jobs
+from repro.sim.compiled import TRACE_CACHE, get_or_compile, replay_batch, replay_journal
+from repro.sim.executor import VALUE_ONLY_CONFIG
+from repro.sim.scenarios import build, list_scenarios, space_draws, value_only_draws
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    TRACE_CACHE.clear()
+    yield
+    TRACE_CACHE.clear()
+
+
+def _tri_identical(inst, config=None):
+    sigs = {
+        eng: inst.run(engine=eng, config=config).signature()
+        for eng in ("cycle", "event", "compiled")
+    }
+    for key in sigs["cycle"]:
+        assert sigs["cycle"][key] == sigs["event"][key], f"cycle!=event in {key!r}"
+        assert sigs["event"][key] == sigs["compiled"][key], f"event!=compiled in {key!r}"
+    return sigs["event"]
+
+
+class TestTriEngineIdentity:
+    @pytest.mark.parametrize("name", list_scenarios())
+    def test_registry_defaults(self, name):
+        _tri_identical(build(name))
+
+    @pytest.mark.parametrize("name", list_scenarios())
+    def test_registry_defaults_replay_hit(self, name):
+        """Second compiled run of one shape is a cache *hit* and still
+        bit-identical to the event engine."""
+        inst = build(name)
+        a = inst.run(engine="compiled")
+        assert TRACE_CACHE.compiles == 1
+        b = inst.run(engine="compiled")
+        assert TRACE_CACHE.hits >= 1 and TRACE_CACHE.compiles == 1
+        assert a.signature() == b.signature() == inst.run(engine="event").signature()
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_randomized_registry_draws(self, seed):
+        rng = random.Random(seed)
+        for name in rng.sample(list_scenarios(), 3):
+            params = space_draws(name, 1, seed=seed)[0]
+            _tri_identical(build(name, **params))
+
+    def test_direct_simulator_api(self):
+        """engine="compiled" through the raw TPUSimulator API (no scenario):
+        two structurally-equal workloads share one trace; results match the
+        event engine."""
+
+        def make(engine):
+            sim = TPUSimulator(SimConfig(engine=engine))
+            s = sim.create_stream()
+            sim.launch(s.stream_id, KernelDesc(
+                name="chase", trace=pointer_chase_trace(1 << 20, 96), dependent=True))
+            return sim
+
+        ref = make("event").run().signature()
+        assert make("compiled").run().signature() == ref  # compile
+        assert make("compiled").run().signature() == ref  # replay
+        assert TRACE_CACHE.compiles == 1 and TRACE_CACHE.hits == 1
+
+    def test_microbench_wrapper(self):
+        a = l2_lat_multistream(4, 128, engine="event").signature()
+        b = l2_lat_multistream(4, 128, engine="compiled").signature()
+        c = l2_lat_multistream(4, 128, engine="compiled").signature()
+        assert a == b == c
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(data=st.data())
+    def test_tri_engine_differential_hypothesis(data):
+        """Hypothesis-driven draw over the registry: scenario + params from
+        its declared space must satisfy cycle == event == compiled."""
+        name = data.draw(st.sampled_from(list_scenarios()))
+        spec_draws = space_draws(name, 4, seed=data.draw(st.integers(0, 999)))
+        params = data.draw(st.sampled_from(spec_draws))
+        TRACE_CACHE.clear()
+        _tri_identical(build(name, **params))
+
+
+class TestTraceCacheInvalidation:
+    def test_value_only_change_replays(self):
+        """A value-only SimConfig change (max_cycles) must NOT recompile —
+        and the replay stays bit-identical to a fresh event run."""
+        inst = build("l2_lat", n_loads=128)
+        inst.run(engine="compiled", config=SimConfig(max_cycles=10_000_000))
+        assert (TRACE_CACHE.compiles, TRACE_CACHE.hits) == (1, 0)
+        res = inst.run(engine="compiled", config=SimConfig(max_cycles=20_000_000))
+        assert (TRACE_CACHE.compiles, TRACE_CACHE.hits) == (1, 1)
+        assert res.signature() == inst.run(
+            engine="event", config=SimConfig(max_cycles=20_000_000)).signature()
+
+    def test_verbose_is_value_only(self, capsys):
+        inst = build("mps_like", tenants=2, kernels_each=1)
+        quiet = inst.run(engine="compiled")
+        cfg = SimConfig(verbose=True)
+        loud = inst.run(engine="compiled", config=cfg)
+        assert TRACE_CACHE.compiles == 1 and TRACE_CACHE.hits == 1
+        assert loud.signature() == quiet.signature()
+        assert "launching kernel" in capsys.readouterr().out  # replay still prints
+
+    def test_shape_param_change_recompiles(self):
+        inst_a = build("l2_lat", n_loads=128)
+        inst_b = build("l2_lat", n_loads=256)  # scenario param ⇒ new shape
+        inst_a.run(engine="compiled")
+        inst_b.run(engine="compiled")
+        assert TRACE_CACHE.compiles == 2 and TRACE_CACHE.hits == 0
+
+    def test_structural_config_change_recompiles(self):
+        inst = build("l2_lat", n_loads=128)
+        inst.run(engine="compiled", config=SimConfig(hbm_latency=100))
+        inst.run(engine="compiled", config=SimConfig(hbm_latency=60))
+        assert TRACE_CACHE.compiles == 2 and TRACE_CACHE.hits == 0
+        # ... and each shape's replay matches its own event run
+        for lat in (100, 60):
+            a = inst.run(engine="compiled", config=SimConfig(hbm_latency=lat))
+            b = inst.run(engine="event", config=SimConfig(hbm_latency=lat))
+            assert a.signature() == b.signature()
+
+    def test_max_cycles_guard_parity(self):
+        """A draw whose max_cycles is too small raises from replay exactly
+        like the event engine raises mid-run."""
+        inst = build("l2_lat", n_loads=256)
+        inst.run(engine="compiled")  # compile with ample budget
+        tiny = SimConfig(max_cycles=50)
+        with pytest.raises(RuntimeError, match="max_cycles=50"):
+            inst.run(engine="event", config=tiny)
+        with pytest.raises(RuntimeError, match="max_cycles=50"):
+            inst.run(engine="compiled", config=tiny)
+        assert TRACE_CACHE.compiles == 1  # the guard fired on a cache hit
+
+    def test_lru_eviction_bounds_memory(self):
+        from repro.sim.compiled import TraceCache
+
+        small = TraceCache(max_entries=2)
+        for n in (32, 64, 96):
+            sim = TPUSimulator(SimConfig())
+            s = sim.create_stream()
+            sim.launch(s.stream_id, KernelDesc(
+                name="k", trace=pointer_chase_trace(0, n), dependent=True))
+            from repro.sim.compiled import _compile, shape_key
+
+            key = shape_key(sim)
+            trace, _ = _compile(sim)
+            trace.key = key
+            small.put(key, trace)
+        assert len(small) == 2
+
+
+class TestReplayInternals:
+    def test_snapshot_restore_equals_journal_landing(self):
+        """The fast replay path (snapshot block copy) must equal the
+        semantic definition (per-segment record_batch landing of the
+        recorded journal) bit-for-bit, across stat views and clean lanes."""
+        for name, params in (
+            ("l2_lat", dict(n_loads=256)),
+            ("cache_thrash", dict(arr_lines=32, passes=4)),
+            ("mixed_stream", dict(n=1 << 12)),
+        ):
+            inst = build(name, **params)
+            sim = inst.make_sim(engine="event")
+            trace, compiled_res = get_or_compile(sim)
+            journal_engine = replay_journal(trace)
+            assert journal_engine.signature() == compiled_res.stats.signature(), name
+            replayed = replay_batch(trace, [SimConfig()])[0]
+            assert replayed.stats.signature() == journal_engine.signature(), name
+
+    def test_replay_batch_lockstep_resources(self):
+        """(segments, runs) lockstep accumulation: every replayed run's
+        final resource counters equal the compile-run's actual counters."""
+        inst = build("mixed_stream", n=1 << 12)
+        sim = inst.make_sim(engine="event")
+        trace, _ = get_or_compile(sim)
+        want_hbm = (sim.hbm.next_free_cycle, sim.hbm.total_bytes,
+                    sim.hbm.total_rd_bytes, sim.hbm.total_wr_bytes)
+        runs = replay_batch(trace, [SimConfig() for _ in range(5)])
+        assert len(runs) == 5
+        for res in runs:
+            got = res.resources["hbm"]
+            assert got == pytest.approx(want_hbm)
+            assert res.resources["writebacks"] == sim.cache.writebacks
+        # independent result objects: mutating one engine must not leak
+        runs[0].stats.record(0, 0, 7, 1, None)
+        assert runs[0].stats.signature() != runs[1].stats.signature()
+
+    def test_replayed_sim_object_state(self):
+        """After a cache-hit run, the simulator object is observably
+        equivalent to one that simulated: stream bookkeeping closed out,
+        bandwidth/writeback counters restored."""
+        inst = build("producer_consumer", stages=2)
+        ref_sim = inst.make_sim(engine="event")
+        ref = ref_sim.run()
+        inst.run(engine="compiled")  # compile
+        hit_sim = inst.make_sim(engine="compiled")
+        res = hit_sim.run()
+        assert res.signature() == ref.signature()
+        assert hit_sim.streams.pending() == 0
+        assert hit_sim.streams.busy_streams() == ()
+        assert hit_sim.hbm.total_bytes == ref_sim.hbm.total_bytes
+        assert hit_sim.hbm.total_wr_bytes == ref_sim.hbm.total_wr_bytes
+        assert hit_sim.cache.writebacks == ref_sim.cache.writebacks
+        assert hit_sim._cycle == ref_sim._cycle
+
+    def test_incremental_rerun_matches_event_engine(self):
+        """run → launch more → run again (the cycle/event incremental
+        pattern) must work on the compiled engine too: the resumed portion
+        falls back to the event loop, bit-identical."""
+
+        def staged(engine):
+            sim = TPUSimulator(SimConfig(engine=engine))
+            s = sim.create_stream()
+            sim.launch(s.stream_id, KernelDesc(
+                name="k1", trace=pointer_chase_trace(1 << 20, 48), dependent=True))
+            sim.run()
+            sim.launch(s.stream_id, KernelDesc(
+                name="k2", trace=pointer_chase_trace(1 << 20, 48), dependent=True))
+            return sim.run()
+
+        assert staged("compiled").signature() == staged("event").signature()
+
+    def test_resume_after_replay_restores_cache_state(self):
+        """Resuming a *replayed* simulator must see the recorded VMEM
+        residency (restored lazily), so a follow-up kernel re-reading the
+        array HITs exactly as it does after a real simulation."""
+
+        def staged(engine):
+            sim = TPUSimulator(SimConfig(engine=engine))
+            s = sim.create_stream()
+            sim.launch(s.stream_id, KernelDesc(
+                name="walk", trace=pointer_chase_trace(1 << 20, 64), dependent=True))
+            sim.run()
+            sim.launch(s.stream_id, KernelDesc(
+                name="rewalk", trace=pointer_chase_trace(1 << 20, 64), dependent=True))
+            return sim.run()
+
+        ref = staged("event")
+        staged("compiled")  # compile the single-kernel shape
+        res = staged("compiled")  # replay, then resume
+        assert res.signature() == ref.signature()
+
+    def test_report_sinks_replayed(self):
+        from repro.core.sinks import JSONSink
+        import io
+
+        inst = build("mps_like", tenants=2, kernels_each=1)
+        buf_ref, buf_replay = io.StringIO(), io.StringIO()
+        inst.run(engine="event", sinks=[JSONSink(buf_ref)])
+        inst.run(engine="compiled")  # compile (no sinks)
+        inst.run(engine="compiled", sinks=[JSONSink(buf_replay)])
+        ref = [
+            {k: v for k, v in obj.items() if k != "header"}
+            for obj in JSONSink.parse(buf_ref.getvalue())
+        ]
+        got = [
+            {k: v for k, v in obj.items() if k != "header"}
+            for obj in JSONSink.parse(buf_replay.getvalue())
+        ]
+        # headers embed kernel uids (run-varying by design); all stat
+        # content, stream ids and block matrices must match exactly
+        assert [
+            {k: v for k, v in o.items() if k not in ("fields",)} for o in ref
+        ] == [
+            {k: v for k, v in o.items() if k not in ("fields",)} for o in got
+        ]
+
+
+class TestVectorBackend:
+    SWEEP = [
+        BatchJob.make("l2_lat", dict(n_loads=64, n_streams=2)),
+        BatchJob.make("l2_lat", dict(n_loads=64, n_streams=2)),  # duplicate shape
+        BatchJob.make("mps_like", dict(tenants=2, kernels_each=2)),
+        BatchJob.make("fork_join", dict(rounds=1, width=2)),
+    ]
+
+    def test_vector_bit_identical_to_serial(self):
+        jobs = self.SWEEP + same_shape_jobs("producer_consumer", 3, dict(stages=2))
+        serial = BatchRunner(jobs).run(parallel=False)
+        vector = BatchRunner(jobs, backend="vector").run(parallel=False)
+        assert serial.signature() == vector.signature()
+        assert serial.oracle_failures() == vector.oracle_failures() == []
+
+    def test_vector_pooled_bit_identical(self):
+        jobs = self.SWEEP
+        serial = BatchRunner(jobs).run(parallel=False)
+        vector = BatchRunner(jobs, workers=2, backend="vector").run(parallel=True)
+        assert serial.signature() == vector.signature()
+
+    def test_vector_simulates_each_shape_once(self):
+        jobs = same_shape_jobs("l2_lat", 6, dict(n_loads=64, n_streams=2))
+        BatchRunner(jobs, backend="vector").run(parallel=False)
+        assert TRACE_CACHE.compiles == 1  # one shape, six draws, one sim
+
+    def test_full_registry_vector_sweep(self):
+        jobs = sweep_jobs(engines=("event",))
+        serial = BatchRunner(jobs).run(parallel=False)
+        vector = BatchRunner(jobs, backend="vector").run(parallel=False)
+        assert serial.signature() == vector.signature()
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(ValueError, match="unknown backend"):
+            BatchRunner(self.SWEEP, backend="gpu")
+
+    def test_group_key_semantics(self):
+        base = BatchJob.make("l2_lat", dict(n_loads=64))
+        value_only = BatchJob.make("l2_lat", dict(n_loads=64),
+                                   config=dict(max_cycles=123456))
+        structural = BatchJob.make("l2_lat", dict(n_loads=64),
+                                   config=dict(hbm_latency=60))
+        assert base.group_key() == value_only.group_key()
+        assert base.group_key() != structural.group_key()
+        assert set(dict(value_only.config)) <= VALUE_ONLY_CONFIG | {"max_cycles"}
+
+    def test_job_config_applies(self):
+        job = BatchJob.make("straggler", dict(short_kernels=2, fast_streams=2),
+                            config=dict(stream_slowdown={1: 2.0}))
+        cfg = job.sim_config()
+        assert cfg.stream_slowdown == {1: 2.0}
+        from repro.sim.batch import run_job
+
+        plain = run_job(BatchJob.make("straggler",
+                                      dict(short_kernels=2, fast_streams=2)))
+        slowed = run_job(job)
+        assert slowed["cycles"] > plain["cycles"]  # the override took effect
+        assert slowed["config"] == {"stream_slowdown": {1: 2.0}}
+
+
+def test_value_only_draws_share_one_shape():
+    draws = value_only_draws(8, seed=3)
+    assert len(draws) == 8
+    assert all(set(d) <= VALUE_ONLY_CONFIG for d in draws)
+    jobs = [BatchJob.make("deepbench", config=d) for d in draws]
+    assert len({j.group_key() for j in jobs}) == 1
