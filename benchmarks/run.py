@@ -25,7 +25,15 @@ def main() -> None:
     # Sections import lazily, jax-free ones first: the batch runner prefers
     # fork-pool workers, which must be spawned before anything (serving,
     # fig5's compiled-HLO tier) loads jax and its thread pools.
-    from . import batch_speed, fig2_l2lat, fig34_mixed, sim_compiled, sim_speed, stats_ingest
+    from . import (
+        batch_speed,
+        fig2_l2lat,
+        fig34_mixed,
+        query_overhead,
+        sim_compiled,
+        sim_speed,
+        stats_ingest,
+    )
 
     # Fresh section payloads land in a temp dir — never over the checked-in
     # repo-root baselines (clobbering those with quick-tier payloads would
@@ -49,7 +57,11 @@ def main() -> None:
         results.append((name, payload["ok"]))
 
     results = []
-    print("=== StatsEngine: batch ingestion vs per-increment seed path ===")
+    # The query gate is a ±few-percent micro-timing; run it first, before
+    # the heavier sections churn the allocator and skew small-object costs.
+    print("=== StatsFrame: report path vs legacy stream_matrix path ===")
+    section("query", query_overhead.run())
+    print("\n=== StatsEngine: batch ingestion vs per-increment seed path ===")
     section("stats_ingest", stats_ingest.run())
     print("\n=== Simulator core: event-driven vs cycle-stepped engine ===")
     section("sim_speed", sim_speed.run(quick=True, repeats=3))

@@ -1,10 +1,12 @@
-"""Quickstart: train a small LM with per-stream stat tracking.
+"""Quickstart: train a small LM with per-stream stat tracking, through the
+stable ``repro.api`` facade.
 
     PYTHONPATH=src python examples/quickstart.py --steps 20
 
 Runs a reduced deepseek-7b-family model on synthetic data with the train
 and eval lanes tracked as separate streams (the paper's feature at the
-framework layer), then prints the per-stream summary.
+framework layer), then prints the per-stream summary and a StatsFrame
+query over the byte-attribution table.
 """
 
 import argparse
@@ -12,11 +14,9 @@ import sys
 
 sys.path.insert(0, "src")
 
-import jax
-
+from repro.api import Trainer, TrainConfig  # jax-backed names resolve lazily
 from repro.configs import get_smoke_config
 from repro.data.pipeline import DataConfig, make_train_iter
-from repro.train.trainer import TrainConfig, Trainer
 
 
 def main() -> None:
@@ -42,6 +42,13 @@ def main() -> None:
     print(f"\nloss: first={hist[0]['loss']:.3f} last={hist[-1]['loss']:.3f}")
     print("\nper-stream summary (train and eval lanes tracked separately):")
     trainer.stats.print_summary()
+
+    # The same data as a StatsFrame query — per-lane HBM byte attribution.
+    frame = trainer.frame()
+    print("per-lane HBM bytes (StatsFrame query):")
+    for lane in ("train", "eval"):
+        per_lane = frame.filter(stream=lane, access_type="GLOBAL_ACC_R").sum()
+        print(f"  {lane:5s} {per_lane:>16d}")
     train_it.close()
     eval_it.close()
 

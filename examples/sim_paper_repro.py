@@ -1,4 +1,5 @@
-"""Paper reproduction demo: the three Accel-Sim builds from one simulator.
+"""Paper reproduction demo: the three Accel-Sim builds from one simulator,
+driven through the stable ``repro.api`` facade.
 
     PYTHONPATH=src python examples/sim_paper_repro.py
 
@@ -6,21 +7,18 @@ Runs the §5.1 four-stream l2_lat microbenchmark under
   (a) tip            — per-stream stats, concurrent streams,
   (b) clean          — baseline aggregation with its undercount bug,
   (c) tip_serialized — the paper's busy_streams.size()==0 patch,
-prints the per-stream breakdowns, kernel timelines, and the validation
-comparisons from Figure 2.
+prints the per-stream breakdowns (StatsFrame queries), kernel timelines, and
+the validation comparisons from Figure 2.
 """
 
 import sys
 
 sys.path.insert(0, "src")
 
-import io
+from repro import simulate
+from repro.sim import l2_lat_expected_counts
 
-from repro.core.stats import AccessOutcome, AccessType
-from repro.sim import l2_lat_expected_counts, l2_lat_multistream
-
-R = AccessType.GLOBAL_ACC_R
-OUTS = [(AccessOutcome.HIT, "HIT"), (AccessOutcome.HIT_RESERVED, "MSHR_HIT"), (AccessOutcome.MISS, "MISS")]
+OUTS = ("HIT", "MSHR_HIT", "MISS")
 
 
 def main() -> None:
@@ -28,36 +26,43 @@ def main() -> None:
     print(f"== l2_lat x {n_streams} streams, {n_loads} dependent loads each ==")
     print(f"closed-form expectation: {l2_lat_expected_counts(n_streams, n_loads)}\n")
 
-    tip = l2_lat_multistream(n_streams, n_loads)
-    ser = l2_lat_multistream(n_streams, n_loads, serialize=True)
+    tip = simulate("l2_lat", n_streams=n_streams, n_loads=n_loads)
+    ser = simulate("l2_lat", n_streams=n_streams, n_loads=n_loads, serialize=True)
+    assert tip.check_oracle()["ok"] and ser.check_oracle()["ok"]
 
     print("-- tip (per-stream stats, concurrent) --")
-    for sid in tip.stats.streams():
-        buf = io.StringIO()
-        tip.stats.print_stats(buf, sid, "Total_core_cache_stats")
-        print(buf.getvalue().rstrip())
+    rows, cols, table = tip.frame.filter(access_type="GLOBAL_ACC_R").pivot(
+        rows="stream", cols="outcome"
+    )
+    widths = [max(len(c), 8) for c in cols]
+    print(f"  {'stream':10s} " + " ".join(f"{c:>{w}s}" for c, w in zip(cols, widths)))
+    for name, row in zip(rows, table):
+        print(f"  {str(name):10s} " + " ".join(f"{v:>{w}d}" for v, w in zip(row, widths)))
     print("\ntimeline (concurrent):")
     print(tip.timeline.ascii_timeline(64))
 
     print("\n-- clean (baseline build: one aggregate, same-cycle lost updates) --")
-    for o, name in OUTS:
-        print(f"  clean[GLOBAL_ACC_R][{name}] = {tip.clean.get(R, o)}")
+    clean = tip.frame.filter(view="clean", access_type="GLOBAL_ACC_R")
+    clean_counts = {name: clean.filter(outcome=name).sum() for name in OUTS}
+    for name, v in clean_counts.items():
+        print(f"  clean[GLOBAL_ACC_R][{name}] = {v}")
     print(f"  lost updates: {tip.clean.lost_updates}")
 
     print("\n-- tip_serialized (busy_streams patch) --")
-    agg = ser.stats.aggregate()
-    for o, name in OUTS:
-        print(f"  serialized[GLOBAL_ACC_R][{name}] = {int(agg[R, o])}")
+    ser_f = ser.frame.filter(access_type="GLOBAL_ACC_R")
+    for name in OUTS:
+        print(f"  serialized[GLOBAL_ACC_R][{name}] = {ser_f.filter(outcome=name).sum()}")
     print("timeline (serialized):")
     print(ser.timeline.ascii_timeline(64))
 
     print("\n== Figure-2 comparisons ==")
-    tip_agg = tip.stats.aggregate()
+    tip_f = tip.frame.filter(access_type="GLOBAL_ACC_R")
     print(f"  clean == sum(tip) per cell: "
-          f"{all(tip.clean.get(R, o) == int(tip_agg[R, o]) for o, _ in OUTS)}")
-    print(f"  serialized HITs ({int(agg[R, AccessOutcome.HIT])}) > concurrent HITs "
-          f"({int(tip_agg[R, AccessOutcome.HIT])}): "
-          f"{int(agg[R, AccessOutcome.HIT]) > int(tip_agg[R, AccessOutcome.HIT])}")
+          f"{all(clean_counts[o] == tip_f.filter(outcome=o).sum() for o in OUTS)}")
+    ser_hits = ser_f.filter(outcome="HIT").sum()
+    tip_hits = tip_f.filter(outcome="HIT").sum()
+    print(f"  serialized HITs ({ser_hits}) > concurrent HITs ({tip_hits}): "
+          f"{ser_hits > tip_hits}")
     print(f"  concurrent makespan {tip.cycles} vs serialized {ser.cycles} cycles")
 
 

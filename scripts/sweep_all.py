@@ -3,7 +3,7 @@
 Two modes:
 
 * ``--mode scenarios`` (default) — fan the whole scenario registry across
-  cores with :class:`repro.sim.batch.BatchRunner`: every registered scenario
+  cores with :func:`repro.api.sweep`: every registered scenario
   on the requested engine loops, pooled, with the serial fallback
   cross-checked bit-identical and every per-stream oracle verified inline.
   ``--backend vector`` swaps per-job simulation for shape-grouped
@@ -31,20 +31,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(
 
 
 def sweep_scenarios(args) -> int:
+    from repro.api import sweep
     from repro.core.sinks import TextSink
-    from repro.sim.batch import BatchRunner, sweep_jobs
 
     engines = tuple(e.strip() for e in args.engines.split(",") if e.strip())
     if not engines or any(e not in ("cycle", "event", "compiled") for e in engines):
         print(f"--engines must name 'cycle', 'event' and/or 'compiled', got {args.engines!r}",
               file=sys.stderr)
         return 2
-    jobs = sweep_jobs(engines=engines)
-    print(f"sweeping {len(jobs)} jobs ({len(jobs)//len(engines)} scenarios x {engines}) "
-          f"via the {args.backend!r} backend", flush=True)
-    runner = BatchRunner(jobs, workers=args.workers or None, backend=args.backend)
-    pooled = runner.run(parallel=True)
-    print(f"pooled: {pooled.wall_s:.2f}s on {pooled.workers} workers", flush=True)
+    pooled = sweep(engines=engines, workers=args.workers or None, backend=args.backend)
+    n_jobs = len(pooled.jobs)
+    print(f"swept {n_jobs} jobs ({n_jobs//len(engines)} scenarios x {engines}) "
+          f"via the {args.backend!r} backend: {pooled.wall_s:.2f}s on "
+          f"{pooled.workers} workers", flush=True)
 
     # identical stays None (never claimed) when the cross-check is skipped.
     # The reference is always the pool backend's serial path — one true
@@ -53,7 +52,7 @@ def sweep_scenarios(args) -> int:
     identical = None
     serial_s = None
     if not args.no_verify:
-        serial = BatchRunner(jobs, workers=args.workers or None).run(parallel=False)
+        serial = sweep(engines=engines, workers=args.workers or None, parallel=False)
         serial_s = serial.wall_s
         identical = serial.signature() == pooled.signature()
         print(f"serial: {serial.wall_s:.2f}s  bit-identical={identical}", flush=True)
@@ -69,7 +68,7 @@ def sweep_scenarios(args) -> int:
         json.dump(
             {
                 "ok": identical is not False and not fails,
-                "n_jobs": len(jobs),
+                "n_jobs": n_jobs,
                 "engines": list(engines),
                 "workers": pooled.workers,
                 "pool_s": round(pooled.wall_s, 4),

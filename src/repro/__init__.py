@@ -5,6 +5,34 @@ Reproduction of "Integrating Per-Stream Stat Tracking into Accel-Sim"
 ``repro.core`` is the paper's contribution, ``repro.sim`` the simulator it
 instruments, and the surrounding packages the training/serving framework
 whose streams it tracks.
+
+Public API — the stable facade lives in :mod:`repro.api`::
+
+    from repro import simulate, sweep, Session, StatsFrame
+
+    res = simulate("l2_lat", n_streams=4, n_loads=256)
+    res.frame.filter(stream="stream_2", outcome="MSHR_HIT").sum()
+
+Names in this module's ``__all__`` (and ``repro.api.__all__``) follow
+semantic versioning against :data:`__version__`; see the policy in
+``repro/api.py`` and the reference in ``docs/API.md``.
+``tests/test_api_surface.py`` snapshots the surface.
 """
 
-__version__ = "1.0.0"
+from . import api
+from .api import RunResult, Session, simulate, sweep
+from .core.query import EventJournal, QueryError, StatsFrame
+
+__all__ = [
+    "__version__",
+    "api",
+    "simulate",
+    "sweep",
+    "Session",
+    "RunResult",
+    "StatsFrame",
+    "EventJournal",
+    "QueryError",
+]
+
+__version__ = "1.1.0"

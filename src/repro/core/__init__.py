@@ -6,6 +6,7 @@ Public API:
         AccessType, AccessOutcome, FailOutcome,
         StatTable, CleanStatTable,
         StatsEngine,                      # vectorized batch ingestion
+        StatsFrame, EventJournal,         # per-stream query layer (core/query.py)
         Report, StatBlock,                # report model
         TextSink, JSONSink, CSVSink,      # pluggable report sinks
         KernelTimeline, KernelTime,
@@ -27,7 +28,9 @@ from .stats import (
     format_breakdown,
 )
 from .engine import CleanView, StatsEngine
+from .query import EventJournal, FrameGroupBy, QueryError, StatsFrame
 from .sinks import (
+    ALL_STREAMS,
     CSVSink,
     JSONSink,
     MultiSink,
@@ -35,8 +38,11 @@ from .sinks import (
     ReportSink,
     StatBlock,
     TextSink,
+    frame_block,
     make_sink,
+    merged_report,
     render_text,
+    stream_report,
 )
 from .timeline import KernelTime, KernelTimeline
 from .stream import Stream, StreamEvent, StreamManager, WorkItem
@@ -53,6 +59,10 @@ __all__ = [
     "format_breakdown",
     "StatsEngine",
     "CleanView",
+    "StatsFrame",
+    "FrameGroupBy",
+    "EventJournal",
+    "QueryError",
     "Report",
     "StatBlock",
     "ReportSink",
@@ -62,6 +72,10 @@ __all__ = [
     "MultiSink",
     "make_sink",
     "render_text",
+    "stream_report",
+    "frame_block",
+    "merged_report",
+    "ALL_STREAMS",
     "KernelTime",
     "KernelTimeline",
     "Stream",

@@ -27,7 +27,8 @@ from typing import Dict, IO, Iterable, Iterator, List, Optional, Tuple
 
 import sys
 
-from .sinks import Report, ReportSink, StatBlock, TextSink
+from .query import StatsFrame
+from .sinks import Report, ReportSink, TextSink, stream_report
 from .stats import DEFAULT_STREAM, StatTable, AccessType, AccessOutcome
 from .timeline import KernelTimeline
 
@@ -179,10 +180,18 @@ class StreamStats:
             "collective_bytes": sum(r.cost.collective_bytes for r in rs),
         }
 
+    def frame(self) -> StatsFrame:
+        """The byte-attribution table + wall-clock timeline as a query frame
+        (``stats.frame().filter(stream=train_stream, access_type="ICI_SND")
+        .sum()`` — live-runtime collective bytes per stream)."""
+        return StatsFrame(self.table, timeline=self.timeline)
+
     # -- reporting (sink subsystem; see repro.core.sinks) -------------------------
     def reports(self, source: str = "runtime") -> "list[Report]":
         """One :class:`Report` per stream — the summary line plus the
-        byte-attribution block, consumable by any sink."""
+        byte-attribution block (a StatsFrame selection), consumable by any
+        sink."""
+        frame = self.frame()
         out = []
         for sid in self.streams():
             s = self.summary(sid)
@@ -193,13 +202,14 @@ class StreamStats:
                 f"TFLOP/s={s.get('flops_per_s', 0.0) / 1e12:.3f}\n"
             )
             out.append(
-                Report(
+                stream_report(
+                    frame,
+                    sid,
                     source=source,
                     event="stream_summary",
-                    stream_id=sid,
+                    cache_name="Runtime_bytes",
                     header=header,
                     fields={k: v for k, v in s.items()},
-                    blocks=[StatBlock("Runtime_bytes", self.table.stream_matrix(sid))],
                 )
             )
         return out

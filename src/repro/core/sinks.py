@@ -40,6 +40,8 @@ __all__ = [
     "make_sink",
     "render_text",
     "merged_report",
+    "frame_block",
+    "stream_report",
     "ALL_STREAMS",
     "SINK_KINDS",
 ]
@@ -208,6 +210,55 @@ def render_text(report: Report) -> str:
     buf = io.StringIO()
     TextSink(buf).emit(report)
     return buf.getvalue()
+
+
+def frame_block(frame, cache_name: str, *, stream=None, view: str = None) -> StatBlock:
+    """One :class:`StatBlock` materialized from a
+    :class:`~repro.core.query.StatsFrame` selection.
+
+    ``view``/``stream`` narrow the frame first (``view="fail"`` marks the
+    block's outcome axis as failure reasons).  For a single-stream tip/fail
+    selection the matrix equals the legacy ``stream_matrix()`` exactly, so
+    text rendering through :func:`format_breakdown` stays byte-identical to
+    the pre-frame report path — ``benchmarks/query_overhead.py`` gates it."""
+    f = frame if view is None else frame.filter(view=view)
+    if stream is not None:
+        f = f.filter(stream=stream)
+    return StatBlock(cache_name, f.matrix(), fail=f._view in ("fail", "clean_fail"))
+
+
+def stream_report(
+    frame,
+    stream,
+    *,
+    source: str,
+    event: str,
+    cache_name: str,
+    fail_cache_name: str = None,
+    header: str = "",
+    fields: Dict[str, object] = None,
+) -> Report:
+    """The canonical per-stream exit report, rendered from a
+    :class:`~repro.core.query.StatsFrame`: the stream's tip matrix under
+    ``cache_name`` plus (when ``fail_cache_name`` is given) its failure
+    matrix.  This is the one report shape the simulator's kernel-exit, the
+    serving engine's request-done and the runtime summary all emit."""
+    sid = stream if type(stream) is int else frame.stream_id(stream)
+    if fail_cache_name is None:
+        blocks = [StatBlock(cache_name, frame.stream_matrix(sid))]
+    else:
+        blocks = [
+            StatBlock(cache_name, frame.stream_matrix(sid)),
+            StatBlock(fail_cache_name, frame.stream_matrix(sid, view="fail"), fail=True),
+        ]
+    return Report(
+        source=source,
+        event=event,
+        stream_id=sid,
+        header=header,
+        fields=fields if fields is not None else {},  # report takes ownership
+        blocks=blocks,
+    )
 
 
 def merged_report(

@@ -35,13 +35,13 @@ from repro.configs.base import ModelConfig
 from repro.core import (
     AccessOutcome,
     AccessType,
-    Report,
     ReportSink,
-    StatBlock,
     StatsEngine,
+    StatsFrame,
     StreamManager,
     StreamStats,
     render_text,
+    stream_report,
 )
 from repro.models import decode_step, init_cache, prefill
 from .cache_utils import transplant
@@ -103,6 +103,7 @@ class Engine:
         self._kv_bytes_per_token = self._estimate_kv_bytes_per_token()
         self._rng = jax.random.PRNGKey(scfg.sample_seed)
         self._retired: List[Request] = []
+        self._frame_cache: Optional[Tuple[int, StatsFrame]] = None
 
     def _select_tokens(self, logits) -> np.ndarray:
         """Next-token selection for ``(B, V)`` logits — the one place both
@@ -206,19 +207,21 @@ class Engine:
     def _retire(self, slot: int) -> None:
         req = self.slots[slot]
         self.slots[slot] = None
-        # paper §3.1: on exit, report only this stream's stats.  Same sink
-        # code path as the simulator's kernel-exit and the trainer's summary.
-        report = Report(
+        # paper §3.1: on exit, report only this stream's stats — a StatsFrame
+        # selection through the same sink code path as the simulator's
+        # kernel-exit and the trainer's summary.
+        report = stream_report(
+            self.frame,
+            req.stream_id,
             source="serve",
             event="request_done",
-            stream_id=req.stream_id,
+            cache_name="Serve_stats",
             fields={
                 "name": req.name,
                 "tokens_out": len(req.generated),
                 "prefill_s": req.prefill_s,
                 "decode_s": req.decode_s,
             },
-            blocks=[StatBlock("Serve_stats", self.table.stream_matrix(req.stream_id))],
         )
         req.exit_report = render_text(report)
         self._retired.append(req)
@@ -248,13 +251,30 @@ class Engine:
         return done
 
     # ------------------------------------------------------------------ reports
+    @property
+    def frame(self) -> StatsFrame:
+        """The engine's per-stream byte table as a query frame; request
+        streams resolve by their submitted names
+        (``eng.frame.filter(stream="req3", access_type="KV_ACC_W").sum()``).
+        Cached until a new stream appears — ``_retire`` reads it per
+        finished request, and rebuilding the name maps there would make
+        retirement O(total requests)."""
+        n = len(self.streams._streams)
+        if self._frame_cache is None or self._frame_cache[0] != n:
+            names = {
+                s.name: sid for sid, s in self.streams._streams.items() if s.name
+            }
+            self._frame_cache = (n, StatsFrame(self.table, names=names))
+        return self._frame_cache[1]
+
     def per_stream_report(self) -> Dict[int, Dict[str, float]]:
+        frame = self.frame.filter(
+            access_type=AccessType.KV_ACC_W, outcome=AccessOutcome.MISS
+        )
         out = {}
         for sid in self.stats.streams():
             out[sid] = self.stats.summary(sid)
-            out[sid]["kv_bytes"] = float(
-                self.table.get(AccessType.KV_ACC_W, AccessOutcome.MISS, sid)
-            )
+            out[sid]["kv_bytes"] = float(frame.filter(stream=sid).sum())
         return out
 
 

@@ -11,14 +11,17 @@ from .resources import Bandwidth, Compute, HW_V5E, VMEMCache
 from .executor import SimConfig, SimResult, TPUSimulator
 from .scenarios import (
     Launch,
+    ORACLE_KEYS,
     ScenarioInstance,
     ScenarioSpec,
     build,
     get_spec,
     list_scenarios,
     scenario,
+    space_draws,
+    value_only_draws,
 )
-from .batch import BatchJob, BatchResult, BatchRunner, run_job, sweep_jobs
+from .batch import BatchJob, BatchResult, BatchRunner, run_job, same_shape_jobs, sweep_jobs
 from .microbench import (
     deepbench_like_workload,
     l2_lat_expected_counts,
@@ -41,16 +44,20 @@ __all__ = [
     "SimResult",
     "TPUSimulator",
     "Launch",
+    "ORACLE_KEYS",
     "ScenarioInstance",
     "ScenarioSpec",
     "scenario",
     "build",
     "get_spec",
     "list_scenarios",
+    "space_draws",
+    "value_only_draws",
     "BatchJob",
     "BatchResult",
     "BatchRunner",
     "run_job",
+    "same_shape_jobs",
     "sweep_jobs",
     "deepbench_like_workload",
     "l2_lat_expected_counts",

@@ -51,7 +51,6 @@ import numpy as np
 from repro.core.collector import namespace_stream, split_namespaced
 from repro.core.engine import StatsEngine
 from repro.core.sinks import ReportSink, merged_report
-from repro.core.stats import AccessOutcome
 from .executor import SimConfig, VALUE_ONLY_CONFIG
 from .scenarios import ScenarioInstance, build, get_spec, list_scenarios
 
@@ -118,26 +117,9 @@ class BatchJob:
 
 
 def _oracle_check(inst: ScenarioInstance, res) -> Optional[Dict[str, object]]:
-    """Inline conformance: compare per-stream counts to the scenario oracle."""
-    if inst.expected is None:
-        return None
-    ids = inst.stream_ids
-    mismatches = []
-    for sname, exp in inst.expected.items():
-        m = res.stats.stream_matrix(ids[sname])
-        got = {
-            "HIT": int(m[:, AccessOutcome.HIT].sum()),
-            "MSHR_HIT": int(m[:, AccessOutcome.HIT_RESERVED].sum()),
-            "MISS": int(m[:, AccessOutcome.MISS].sum()),
-            "RES_FAIL": int(m[:, AccessOutcome.RESERVATION_FAILURE].sum()),
-        }
-        got["TOTAL"] = got["HIT"] + got["MSHR_HIT"] + got["MISS"]
-        for key, want in exp.items():
-            if got[key] != want:
-                mismatches.append(
-                    {"stream": sname, "key": key, "want": want, "got": got[key]}
-                )
-    return {"ok": not mismatches, "mismatches": mismatches}
+    """Inline conformance — a declarative StatsFrame query per expected
+    stream (see :meth:`repro.sim.scenarios.ScenarioInstance.check_oracle`)."""
+    return inst.check_oracle(res)
 
 
 def _payload(job: BatchJob, inst: ScenarioInstance, res) -> Dict[str, object]:
@@ -268,6 +250,40 @@ class BatchResult:
         for gid in self.merged.streams():
             out[split_namespaced(gid)] = self.merged.stream_matrix(gid)
         return out
+
+    def frame(self) -> "StatsFrame":
+        """The merged per-stream store as a query frame.  Streams are the
+        namespaced (job, stream) rows, named ``"job<j>/<scenario>/<stream>"``
+        with per-job stream names resolved from each payload — so
+        ``result.frame().filter(stream="job0/l2_lat/stream_1").sum()`` and
+        ``groupby("stream")`` work across the whole sweep."""
+        from repro.core.query import StatsFrame
+
+        names: Dict[str, int] = {}
+        for idx, p in enumerate(self.payloads):
+            by_id = {sid: n for n, sid in p["stream_ids"].items()}
+            for sid_str in p["signature"]["stats"]["streams"]:
+                sid = int(sid_str)
+                local = by_id.get(sid, sid)
+                label = local if local != "" else "default"
+                names[f"job{idx}/{p['scenario']}/{label}"] = namespace_stream(idx, sid)
+        return StatsFrame(self.merged, names=names)
+
+    def job_frame(self, idx: int) -> "StatsFrame":
+        """One job's per-stream counts as a query frame, rebuilt from its
+        payload signature (plain structures — works on payloads that crossed
+        a process boundary)."""
+        from repro.core.query import StatsFrame
+        from repro.core.stats import StatTable
+
+        p = self.payloads[idx]
+        table = StatTable(name=f"job{idx}_{p['scenario']}")
+        for sid_str, views in p["signature"]["stats"]["streams"].items():
+            sid = int(sid_str)
+            table._stats[sid] = np.asarray(views["cum"], dtype=np.uint64)
+            table._stats_pw[sid] = np.asarray(views["pw"], dtype=np.uint64)
+            table._fail_stats[sid] = np.asarray(views["fail"], dtype=np.uint64)
+        return StatsFrame(table, names=dict(p["stream_ids"]))
 
     def report(self):
         """Merged multi-run report (``stream_id=ALL_STREAMS``)."""

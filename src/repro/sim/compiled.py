@@ -58,6 +58,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.engine import StatsEngine
+from repro.core.query import EventJournal
 from repro.core.stats import AccessOutcome
 from repro.core.timeline import KernelTimeline
 
@@ -87,23 +88,24 @@ def _engine_ctor_kwargs() -> dict:
     )
 
 
-class RecordingStatsEngine(StatsEngine):
-    """Drop-in :class:`StatsEngine` that journals every flushed event column
-    and marks a segment boundary (plus a resource snapshot, via
-    ``segment_hook``) at each ``clear_pw`` — the executor's kernel-exit
-    boundary.  The journal is the compiled trace's ground truth: landing it
-    again segment-by-segment reproduces this engine's state bit-for-bit."""
+class RecordingStatsEngine(EventJournal):
+    """The compiler's journal: an :class:`~repro.core.query.EventJournal`
+    (which owns the flushed-column retention via the shared ``_on_flush``
+    hook) that additionally marks a segment boundary — plus a resource
+    snapshot, via ``segment_hook`` — at each ``clear_pw``, the executor's
+    kernel-exit boundary.  The journal is the compiled trace's ground
+    truth: landing it again segment-by-segment reproduces this engine's
+    state bit-for-bit."""
 
     def __init__(self) -> None:
         super().__init__(**_engine_ctor_kwargs())
-        self._j_chunks: List[Tuple[np.ndarray, ...]] = []
         self._j_len = 0
         self.seg_bounds: List[int] = []  # journal length at each clear_pw
         self.seg_snaps: List[Tuple[float, ...]] = []  # segment_hook() values
         self.segment_hook = None  # set by the compiler: () -> tuple
 
     def _on_flush(self, sid, at, col, cnt, cyc, lane) -> None:
-        self._j_chunks.append((sid, at, col, cnt, cyc, lane))
+        super()._on_flush(sid, at, col, cnt, cyc, lane)
         self._j_len += len(sid)
 
     def clear_pw(self) -> None:
@@ -113,16 +115,7 @@ class RecordingStatsEngine(StatsEngine):
             self.seg_snaps.append(self.segment_hook())
 
     def journal_columns(self) -> Dict[str, np.ndarray]:
-        self.flush()
-        cols = ("sid", "at", "col", "cnt", "cyc", "lane")
-        if not self._j_chunks:
-            dt = dict(sid=np.int64, at=np.int64, col=np.int64, cnt=np.uint64,
-                      cyc=np.int64, lane=np.uint8)
-            return {c: np.zeros(0, dtype=dt[c]) for c in cols}
-        return {
-            c: np.concatenate([ch[i] for ch in self._j_chunks])
-            for i, c in enumerate(cols)
-        }
+        return self.columns()
 
 
 class _RecordingSink:

@@ -46,7 +46,8 @@ import re
 import numpy as np
 
 from repro.core.engine import CleanView, StatsEngine
-from repro.core.sinks import Report, ReportSink, StatBlock, render_text
+from repro.core.query import StatsFrame
+from repro.core.sinks import ReportSink, render_text, stream_report
 from repro.core.stats import AccessOutcome, AccessType
 from repro.core.stream import StreamManager, WorkItem
 from repro.core.timeline import KernelTimeline
@@ -129,6 +130,13 @@ class SimResult:
 
     def tip_aggregate(self):
         return self.stats.aggregate()
+
+    @property
+    def frame(self) -> StatsFrame:
+        """The run's stats as a :class:`~repro.core.query.StatsFrame`
+        (timeline attached; stream *names* attach at the ``repro.api``
+        layer, which knows the scenario's name → id map)."""
+        return StatsFrame(self.stats, timeline=self.timeline)
 
     def signature(self) -> dict:
         """Everything observable about the simulation, as comparable plain
@@ -339,6 +347,7 @@ class TPUSimulator:
         self._active: List[_Run] = []
         self._n_synth = 0  # active runs without an explicit trace (FF-eligible)
         self._cycle = 0
+        self._frame: Optional[StatsFrame] = None  # lazy; rebuilt on engine swap
 
     # -- stream/launch API (mirrors cuda<<<>>> + events) -------------------------
     def create_stream(self, name: str = "", priority: int = 0):
@@ -992,25 +1001,27 @@ class TPUSimulator:
         self.timeline.on_done(run.work.stream_id, run.desc.uid, cycle)
         sid = run.work.stream_id
         # Paper §3.1: report only the exiting kernel's stream stats.  The
-        # report goes through the sink subsystem; the text rendering is
-        # byte-identical to the seed printer (shared formatter).
+        # report is a StatsFrame selection through the sink subsystem; the
+        # single-stream frame matrix equals the legacy ``stream_matrix``
+        # exactly, so the text rendering stays byte-identical to the seed
+        # printer (shared formatter; gated by benchmarks/query_overhead.py).
         buf = io.StringIO()
         buf.write(f"kernel '{run.desc.name}' uid {run.desc.uid} finished on stream {sid} @ cycle {cycle}\n")
         self.timeline.print_kernel(buf, sid, run.desc.uid)
-        report = Report(
+        # The frame is cached across retires; rebuilt if a recorder swapped
+        # the engine after construction (repro.sim.compiled / EventJournal).
+        frame = self._frame
+        if frame is None or frame._src is not self.engine:
+            frame = self._frame = StatsFrame(self.engine, timeline=self.timeline)
+        report = stream_report(
+            frame,
+            sid,
             source="sim",
             event="kernel_exit",
-            stream_id=sid,
+            cache_name="Total_core_cache_stats",
+            fail_cache_name="Total_core_cache_fail_stats",
             header=buf.getvalue(),
             fields={"kernel": run.desc.name, "uid": run.desc.uid, "cycle": cycle},
-            blocks=[
-                StatBlock("Total_core_cache_stats", self.engine.stream_matrix(sid)),
-                StatBlock(
-                    "Total_core_cache_fail_stats",
-                    self.engine.stream_matrix(sid, fail=True),
-                    fail=True,
-                ),
-            ],
         )
         self._emit(render_text(report).rstrip("\n"))
         for sink in self.sinks:

@@ -29,6 +29,7 @@ shapes (``_deepbench_descs``) are shared with the registered scenario.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -53,6 +54,33 @@ __all__ = [
 
 #: Float32 element size used by the saxpy-family kernels.
 F32 = 4
+
+#: wrappers that already warned this process (one DeprecationWarning each —
+#: the legacy entry points are loops' inner calls in old scripts; warn once,
+#: not per invocation).  Cleared by tests via ``_reset_deprecations()``.
+_DEPRECATION_WARNED: set = set()
+
+
+def _warn_deprecated(fn_name: str, replacement: str) -> None:
+    """Single-shot deprecation notice for a legacy wrapper.  The wrapper
+    stays bit-identical to the replacement (asserted by
+    ``tests/test_api_surface.py``) until removal at the next major version
+    — see the policy in ``repro/api.py`` / ``docs/API.md``."""
+    if fn_name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(fn_name)
+    warnings.warn(
+        f"repro.sim.microbench.{fn_name} is deprecated; use {replacement} "
+        "(bit-identical results) — the wrapper will be removed in the next "
+        "major version",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def _reset_deprecations() -> None:
+    """Test hook: re-arm the single-shot deprecation warnings."""
+    _DEPRECATION_WARNED.clear()
 
 
 # --------------------------------------------------------------------------- §5.1
@@ -108,7 +136,13 @@ def l2_lat_multistream(
     the **same** array, exactly like the paper's four ``l2_lat<<<1,1,0,
     stream_k>>>(..., posArray_g, ...)`` launches.  Thin wrapper over the
     registered ``l2_lat`` scenario.
+
+    .. deprecated:: 1.1
+       Use ``repro.api.simulate("l2_lat", n_streams=..., n_loads=...,
+       serialize=...)`` — bit-identical results, plus the StatsFrame query
+       layer on the returned run.
     """
+    _warn_deprecated("l2_lat_multistream", 'repro.api.simulate("l2_lat", ...)')
     cfg = config or SimConfig()
     cfg.serialize_streams = serialize
     cfg.concurrent_streams = concurrent
@@ -232,7 +266,12 @@ def mixed_stream_workload(
       * kernel 4 (add, default stream) — depends on kernel 2 (stream FIFO)
 
     Thin wrapper over the registered ``mixed_stream`` scenario.
+
+    .. deprecated:: 1.1
+       Use ``repro.api.simulate("mixed_stream", n_streams=..., n=...,
+       serialize=...)`` — bit-identical results.
     """
+    _warn_deprecated("mixed_stream_workload", 'repro.api.simulate("mixed_stream", ...)')
     cfg = config or SimConfig()
     cfg.serialize_streams = serialize
     inst = build("mixed_stream", n_streams=n_streams, n=n, serialize=serialize)
@@ -293,7 +332,15 @@ def deepbench_like_workload(
     shape (m=35, n=1500... the trace's K/N/batch family 35×1500×2560) —
     or pass descriptors derived from real compiled HLO
     (:func:`repro.sim.hlo_costs.kernels_from_compiled`).
+
+    .. deprecated:: 1.1
+       The default-kernel path is ``repro.api.simulate("deepbench",
+       n_streams=..., repeats=...)`` (bit-identical).  Only the explicit
+       ``kernels=`` form (arbitrary/compiled-HLO descriptors the registry
+       does not model) stays un-deprecated.
     """
+    if kernels is None:
+        _warn_deprecated("deepbench_like_workload", 'repro.api.simulate("deepbench", ...)')
     cfg = config or SimConfig()
     cfg.serialize_streams = serialize
     if engine is not None:

@@ -49,6 +49,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .executor import SimConfig, SimResult, TPUSimulator
 from .kernel_desc import KernelDesc, LINE_SIZE, pointer_chase_trace, streaming_trace
+from repro.core.query import StatsFrame
 from repro.core.sinks import ReportSink
 from repro.core.stats import AccessType
 
@@ -62,8 +63,13 @@ __all__ = [
     "list_scenarios",
     "space_draws",
     "value_only_draws",
+    "ORACLE_KEYS",
     "DEFAULT_STREAM_NAME",
 ]
+
+#: Oracle key convention (see module docstring) — exactly what
+#: :meth:`repro.core.query.StatsFrame.outcome_counts` returns.
+ORACLE_KEYS = ("HIT", "MSHR_HIT", "MISS", "RES_FAIL", "TOTAL")
 
 #: Launch.stream value meaning "the default stream" (id 0, like CUDA's).
 DEFAULT_STREAM_NAME = ""
@@ -260,6 +266,32 @@ class ScenarioInstance:
     ) -> SimResult:
         """Execute on a fresh simulator (see :meth:`make_sim`)."""
         return self.make_sim(engine=engine, config=config, sinks=sinks).run()
+
+    # -- oracle as a StatsFrame query ---------------------------------------------
+    def frame(self, res: SimResult) -> StatsFrame:
+        """``res``'s stats as a query frame with this scenario's stream
+        *names* resolvable (``frame.filter(stream="prio_hi")``)."""
+        return StatsFrame(res.stats, timeline=res.timeline, names=self.stream_ids)
+
+    def check_oracle(self, res: SimResult) -> Optional[Dict[str, object]]:
+        """Declarative conformance: each expected per-stream row is one
+        :meth:`~repro.core.query.StatsFrame.outcome_counts` query compared
+        against the oracle's :data:`ORACLE_KEYS`.  Returns ``None`` when the
+        scenario has no analytic oracle (golden-table scenarios), else
+        ``{"ok": bool, "mismatches": [...]}`` — the payload the batch runner
+        ships inline with every job."""
+        if self.expected is None:
+            return None
+        frame = self.frame(res)
+        mismatches = []
+        for sname, exp in self.expected.items():
+            got = frame.filter(stream=sname).outcome_counts()
+            for key, want in exp.items():
+                if got[key] != want:
+                    mismatches.append(
+                        {"stream": sname, "key": key, "want": want, "got": got[key]}
+                    )
+        return {"ok": not mismatches, "mismatches": mismatches}
 
 
 # --------------------------------------------------------------------------- sweep helpers

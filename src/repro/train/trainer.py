@@ -225,6 +225,19 @@ class Trainer:
         self.emit_reports()
         return params, opt_state, history
 
+    def frame(self):
+        """The trainer's per-stream telemetry as a
+        :class:`~repro.core.query.StatsFrame` — the train and eval lanes
+        resolve by name (``trainer.frame().filter(stream="train",
+        access_type="GLOBAL_ACC_R").sum()`` is the train lane's HBM bytes)."""
+        from repro.core.query import StatsFrame
+
+        return StatsFrame(
+            self.stats.table,
+            timeline=self.stats.timeline,
+            names={"train": self.train_stream, "eval": self.eval_stream},
+        )
+
     def emit_reports(self) -> int:
         """Per-stream summary reports (train/eval lanes) through the plugged
         sinks — the same reporting path the simulator and serving engine use."""

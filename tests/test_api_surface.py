@@ -1,0 +1,227 @@
+"""Public API surface snapshot + facade behaviour + deprecation shims.
+
+The snapshot below IS the stable surface (see the semver policy in
+``repro/api.py`` / ``docs/API.md``): adding or removing a public name
+without updating it fails here, so surface changes are always a deliberate,
+reviewable diff.
+"""
+
+import warnings
+
+import pytest
+
+import repro
+import repro.api
+import repro.core
+import repro.sim
+from repro import Session, StatsFrame, simulate, sweep  # the acceptance import
+from repro.sim import microbench
+
+# --------------------------------------------------------------------------- snapshot
+API_SURFACE = {
+    "repro": [
+        "EventJournal", "QueryError", "RunResult", "Session", "StatsFrame",
+        "__version__", "api", "simulate", "sweep",
+    ],
+    "repro.api": [
+        "Access", "BatchJob", "BatchResult", "EventJournal", "KernelDesc",
+        "Launch", "QueryError", "RunResult", "ServeConfig", "ServeEngine",
+        "ServeRequest", "Session", "SimConfig", "StatsFrame", "TrainConfig",
+        "Trainer", "build_scenario", "list_scenarios", "make_sink",
+        "simulate", "sweep",
+    ],
+    "repro.core": [
+        "ALL_STREAMS", "AccessOutcome", "AccessType", "CSVSink",
+        "CleanStatTable", "CleanView", "DEFAULT_STREAM", "EventJournal",
+        "FailOutcome", "FrameGroupBy", "JSONSink", "KernelTime",
+        "KernelTimeline", "MultiSink", "QueryError", "Report", "ReportSink",
+        "StatBlock", "StatCollector", "StatTable", "StatsEngine",
+        "StatsFrame", "StepCost", "StepRecord", "Stream", "StreamEvent",
+        "StreamManager", "StreamStats", "TextSink", "WorkItem",
+        "current_stream", "format_breakdown", "frame_block", "make_sink",
+        "merged_report", "namespace_stream", "render_text",
+        "split_namespaced", "stream_report", "stream_scope",
+    ],
+    "repro.sim": [
+        "Access", "Bandwidth", "BatchJob", "BatchResult", "BatchRunner",
+        "Compute", "HW_V5E", "KernelDesc", "LINE_SIZE", "Launch",
+        "ORACLE_KEYS", "ScenarioInstance", "ScenarioSpec", "SimConfig",
+        "SimResult", "TPUSimulator", "VMEMCache", "build",
+        "deepbench_like_workload", "get_spec", "kernels_from_compiled",
+        "kernels_from_summary", "l2_lat_expected_counts",
+        "l2_lat_multistream", "list_scenarios", "mixed_stream_workload",
+        "pointer_chase_trace", "run_job", "same_shape_jobs", "scenario",
+        "space_draws", "streaming_trace", "sweep_jobs", "value_only_draws",
+    ],
+}
+
+_MODULES = {
+    "repro": repro,
+    "repro.api": repro.api,
+    "repro.core": repro.core,
+    "repro.sim": repro.sim,
+}
+
+
+@pytest.mark.parametrize("modname", sorted(API_SURFACE))
+def test_api_surface_snapshot(modname):
+    mod = _MODULES[modname]
+    got = sorted(mod.__all__)
+    want = sorted(API_SURFACE[modname])
+    added = sorted(set(got) - set(want))
+    removed = sorted(set(want) - set(got))
+    assert got == want, (
+        f"{modname} public surface changed — added {added}, removed {removed}. "
+        "If intentional, update API_SURFACE in tests/test_api_surface.py "
+        "(and docs/API.md + the semver note in repro/api.py)."
+    )
+
+
+@pytest.mark.parametrize("modname", sorted(API_SURFACE))
+def test_every_public_name_resolves(modname):
+    mod = _MODULES[modname]
+    lazy = getattr(mod, "_LAZY", {})
+    for name in mod.__all__:
+        if name in lazy:
+            # jax-backed lazy re-export: resolving it imports jax — assert
+            # the mapping instead so this test stays light; the examples CI
+            # step exercises the real resolution.
+            target_mod, target_name = lazy[name]
+            assert target_mod.startswith("repro."), (modname, name)
+        else:
+            assert getattr(mod, name) is not None, (modname, name)
+
+
+def test_api_lazy_names_stay_out_of_eager_import():
+    import importlib
+    import subprocess
+    import sys
+
+    # a fresh interpreter importing repro must not pull jax
+    code = "import repro, sys; assert 'jax' not in sys.modules, 'facade import loaded jax'"
+    subprocess.run([sys.executable, "-c", code], check=True)
+
+
+def test_version_is_semver():
+    parts = repro.__version__.split(".")
+    assert len(parts) == 3 and all(p.isdigit() for p in parts)
+
+
+# --------------------------------------------------------------------------- facade behaviour
+def test_simulate_facade_and_oracle():
+    res = simulate("l2_lat", n_streams=3, n_loads=32)
+    assert res.scenario == "l2_lat"
+    assert res.params["n_streams"] == 3
+    assert res.check_oracle()["ok"]
+    assert isinstance(res.frame, StatsFrame)
+    assert res.cycles == res.result.cycles
+    # keyword-first config: dict form and engine override
+    res2 = simulate("l2_lat", n_streams=3, n_loads=32,
+                    config={"hbm_latency": 150}, engine="cycle")
+    assert res2.result.cycles > 0
+
+
+def test_simulate_tri_engine_identity():
+    sigs = [
+        simulate("mixed_stream", n_streams=2, n=1 << 12, engine=e).signature()
+        for e in ("cycle", "event", "compiled")
+    ]
+    assert sigs[0] == sigs[1] == sigs[2]
+
+
+def test_simulate_rejects_bad_inputs():
+    with pytest.raises(KeyError):
+        simulate("not_a_scenario")
+    with pytest.raises(TypeError):
+        simulate("l2_lat", not_a_param=1)
+    with pytest.raises(ValueError):
+        simulate("l2_lat", engine="compiled", keep_events=True)
+    from repro.sim.scenarios import build
+
+    with pytest.raises(TypeError):
+        simulate(build("l2_lat"), n_streams=2)
+
+
+def test_simulate_launch_list():
+    from repro.api import KernelDesc, Launch
+
+    rows = [
+        Launch("a", KernelDesc(name="ka", hbm_rd_bytes=64 * 512, addr_base=1 << 20)),
+        Launch("b", KernelDesc(name="kb", hbm_wr_bytes=32 * 512, addr_base=1 << 24)),
+    ]
+    res = simulate(rows)
+    assert res.scenario == "adhoc"
+    assert res.frame.groupby("stream").sum() == {"a": 64, "b": 32}
+
+
+def test_sweep_facade():
+    res = sweep(["l2_lat", "deepbench"], engines=("event",), workers=2)
+    assert len(res.jobs) == 2
+    assert not res.oracle_failures()
+    assert res.frame().sum() == res.job_frame(0).sum() + res.job_frame(1).sum()
+    with pytest.raises(TypeError):
+        sweep(["l2_lat"], jobs=[])
+    # jobs carry their own engine/params — extras are rejected, not dropped
+    from repro.api import BatchJob
+
+    with pytest.raises(TypeError):
+        sweep(jobs=[BatchJob.make("l2_lat")], engines=("cycle",))
+    with pytest.raises(TypeError):
+        sweep(jobs=[BatchJob.make("l2_lat")], params={"l2_lat": {"n_loads": 8}})
+
+
+def test_sweep_serial_matches_pooled():
+    pooled = sweep(["l2_lat", "mps_like"], engines=("event",), workers=2)
+    serial = sweep(["l2_lat", "mps_like"], engines=("event",), parallel=False)
+    assert pooled.signature() == serial.signature()
+
+
+# --------------------------------------------------------------------------- deprecation shims
+def test_deprecated_wrappers_warn_once_and_match_facade():
+    microbench._reset_deprecations()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        legacy = microbench.l2_lat_multistream(3, 32)
+        microbench.l2_lat_multistream(3, 32)  # second call: no new warning
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1, "wrapper must warn exactly once per process"
+    assert "repro.api.simulate" in str(dep[0].message)
+    assert legacy.signature() == simulate("l2_lat", n_streams=3, n_loads=32).signature()
+
+
+def test_deprecated_mixed_stream_bit_identical():
+    microbench._reset_deprecations()
+    with pytest.warns(DeprecationWarning):
+        legacy = microbench.mixed_stream_workload(2, n=1 << 12)
+    new = simulate("mixed_stream", n_streams=2, n=1 << 12)
+    assert legacy.signature() == new.signature()
+
+
+def test_deprecated_deepbench_default_path_bit_identical():
+    microbench._reset_deprecations()
+    with pytest.warns(DeprecationWarning):
+        legacy = microbench.deepbench_like_workload(n_streams=2, repeats=2)
+    new = simulate("deepbench", n_streams=2, repeats=2)
+    assert legacy.signature() == new.signature()
+
+
+def test_deepbench_custom_kernels_do_not_warn():
+    from repro.sim.kernel_desc import KernelDesc
+
+    microbench._reset_deprecations()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        microbench.deepbench_like_workload(
+            kernels=[KernelDesc(name="k", hbm_rd_bytes=512, addr_base=1 << 20)],
+            n_streams=1,
+        )
+    assert not [w for w in caught if issubclass(w.category, DeprecationWarning)]
+
+
+def test_legacy_stream_matrix_accessors_still_match_frames():
+    # kept-for-compat accessors delegate to the same stores the frames read
+    res = simulate("deepbench", n_streams=2, repeats=2)
+    import numpy as np
+
+    for sid in res.stats.streams():
+        assert np.array_equal(res.stats.stream_matrix(sid), res.frame.stream_matrix(sid))

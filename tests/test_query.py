@@ -1,0 +1,476 @@
+"""StatsFrame query-layer tests: equivalence with the legacy accessors,
+lazy/zero-copy behaviour, name resolution, grouping/pivots/exports, the
+timeline join (during / between_kernels / groupby("kernel")), and the
+byte-identity of sink reports rendered through frames."""
+
+import io
+
+import numpy as np
+import pytest
+
+from repro.api import Session, simulate
+from repro.core.engine import StatsEngine
+from repro.core.query import EventJournal, QueryError, StatsFrame
+from repro.core.sinks import frame_block, render_text, stream_report, Report, StatBlock
+from repro.core.stats import AccessOutcome, AccessType, CleanStatTable, StatTable
+from repro.sim.scenarios import build
+
+
+# --------------------------------------------------------------------------- helpers
+def _rand_engine(seed=0, n_events=4000, n_streams=5):
+    rng = np.random.default_rng(seed)
+    eng = StatsEngine()
+    eng.record_batch(
+        rng.integers(0, AccessType.count(), n_events),
+        rng.integers(0, AccessOutcome.count(), n_events),
+        rng.integers(0, n_streams, n_events),
+        rng.integers(1, 5, n_events).astype(np.uint64),
+        np.cumsum(rng.random(n_events) < 0.4).astype(np.int64),
+    )
+    eng.record_batch(
+        rng.integers(0, AccessType.count(), 200),
+        rng.integers(0, 4, 200),
+        rng.integers(0, n_streams, 200),
+        fail=True,
+    )
+    return eng
+
+
+# --------------------------------------------------------------------------- accessors
+def test_matrix_matches_stream_matrix_all_views():
+    eng = _rand_engine()
+    f = StatsFrame(eng)
+    for sid in eng.streams():
+        assert np.array_equal(f.filter(stream=sid).matrix(), eng.stream_matrix(sid))
+        assert np.array_equal(
+            f.filter(stream=sid, view="pw").matrix(), eng.stream_matrix(sid, pw=True)
+        )
+        assert np.array_equal(
+            f.filter(stream=sid, view="fail").matrix(), eng.stream_matrix(sid, fail=True)
+        )
+        # the frame-native single-stream accessor too
+        assert np.array_equal(f.stream_matrix(sid), eng.stream_matrix(sid))
+        assert np.array_equal(f.stream_matrix(sid, view="fail"), eng.stream_matrix(sid, fail=True))
+
+
+def test_aggregate_and_sum():
+    eng = _rand_engine()
+    f = StatsFrame(eng)
+    assert np.array_equal(f.matrix(), eng.aggregate())
+    assert f.sum() == int(eng.aggregate().sum())
+    assert f.filter(view="fail").sum() == int(eng.aggregate(fail=True).sum())
+
+
+def test_unknown_stream_is_zero():
+    eng = _rand_engine()
+    f = StatsFrame(eng)
+    assert f.filter(stream=999).sum() == 0
+    assert np.array_equal(f.stream_matrix(999), np.zeros_like(eng.stream_matrix(999)))
+
+
+def test_axis_filters_and_intersection():
+    eng = _rand_engine()
+    f = StatsFrame(eng)
+    m = eng.aggregate()
+    t = int(AccessType.GLOBAL_ACC_R)
+    o = int(AccessOutcome.MISS)
+    assert f.filter(access_type=t, outcome=o).sum() == int(m[t, o])
+    assert f.filter(access_type="GLOBAL_ACC_R").filter(outcome="MISS").sum() == int(m[t, o])
+    # intersecting disjoint selections -> empty
+    assert f.filter(stream=0).filter(stream=1).sum() == 0
+    # outcome display names (paper labels) and enum names both resolve
+    assert (
+        f.filter(outcome="MSHR_HIT").sum()
+        == f.filter(outcome="HIT_RESERVED").sum()
+        == int(m[:, AccessOutcome.HIT_RESERVED].sum())
+    )
+
+
+def test_name_resolution_and_errors():
+    eng = _rand_engine()
+    f = StatsFrame(eng, names={"alpha": 0, "beta": 1})
+    assert f.filter(stream="alpha").sum() == f.filter(stream=0).sum()
+    assert f.stream_label(1) == "beta"
+    assert f.stream_label(3) == 3
+    with pytest.raises(QueryError):
+        f.filter(stream="gamma")
+    with pytest.raises(QueryError):
+        f.filter(access_type="NOT_A_TYPE")
+    with pytest.raises(QueryError):
+        f.filter(outcome="NOT_AN_OUTCOME")
+    with pytest.raises(QueryError):
+        f.filter(view="bogus")
+    with pytest.raises(QueryError):
+        f.groupby("bogus")
+
+
+def test_stream_matrix_view_override_drops_cross_axis_outcome_filter():
+    # regression: an AccessOutcome filter must not mask FailOutcome columns
+    # when the view= override crosses the tip/fail axis boundary
+    eng = StatsEngine()
+    eng.record(0, int(AccessOutcome.MISS), 1, 5, 10)
+    eng.record_fail(0, 0, 1, 3, 11)
+    f = StatsFrame(eng).filter(outcome="MISS")
+    assert np.array_equal(f.stream_matrix(1, view="fail"), eng.stream_matrix(1, fail=True))
+    assert int(f.stream_matrix(1, view="fail").sum()) == 3
+    # the same-axis filter still applies
+    assert int(f.stream_matrix(1).sum()) == 5
+    # and through a cycle window too
+    ej = EventJournal()
+    ej.record(0, int(AccessOutcome.MISS), 1, 5, 10)
+    ej.record_fail(0, 0, 1, 3, 11)
+    wf = StatsFrame(ej).filter(outcome="MISS").between_cycles(0, 20)
+    assert int(wf.stream_matrix(1, view="fail").sum()) == 3
+
+
+def test_fail_view_outcome_names():
+    eng = _rand_engine()
+    f = StatsFrame(eng, view="fail")
+    agg = eng.aggregate(fail=True)
+    assert f.filter(outcome="MSHR_ENTRY_FAIL").sum() == int(agg[:, 1].sum())
+    # switching view families drops the (incompatible) outcome filter
+    assert f.filter(outcome="MSHR_ENTRY_FAIL").filter(view="tip").sum() == StatsFrame(eng).sum()
+
+
+def test_stream_filtered_frame_rejects_clean_view_switch():
+    # regression: a retained stream filter must not silently serve tip data
+    # relabeled as the (streamless) clean lanes
+    eng = _rand_engine()
+    f = StatsFrame(eng)
+    for clean_view in ("clean", "clean_fail"):
+        with pytest.raises(QueryError):
+            f.filter(stream=0).filter(view=clean_view)
+
+
+def test_outcome_counts_rejects_fail_views():
+    # regression: AccessOutcome column indices into a FailOutcome axis are
+    # silently meaningless — must raise instead
+    eng = _rand_engine()
+    with pytest.raises(QueryError):
+        StatsFrame(eng).filter(view="fail").outcome_counts()
+    with pytest.raises(QueryError):
+        StatsFrame(eng, view="clean_fail").outcome_counts()
+
+
+def test_clean_views():
+    eng = _rand_engine()
+    f = StatsFrame(eng)
+    assert np.array_equal(f.filter(view="clean").matrix(), eng.clean.matrix())
+    assert f.filter(view="clean").sum() == int(eng.clean.matrix().sum())
+    assert f.filter(view="clean_fail").sum() == int(eng.clean_fail.matrix().sum())
+    with pytest.raises(QueryError):
+        f.filter(view="clean", stream=0)
+    # CleanStatTable as a direct source
+    ct = CleanStatTable()
+    ct.inc_stats(0, 2, cycle=5, stream_id=1, n=3)
+    cf = StatsFrame(ct, view="clean")
+    assert cf.sum() == 3
+
+
+def test_stat_table_source():
+    t = StatTable()
+    t.inc_stats(0, 2, 7, 5)
+    t.inc_stats_pw(0, 2, 7, 5)
+    t.inc_fail_stats(1, 0, 7, 2)
+    f = StatsFrame(t, names={"s": 7})
+    assert f.filter(stream="s").sum() == 5
+    assert f.filter(view="pw").sum() == 5
+    assert f.filter(view="fail").sum() == 2
+    assert np.array_equal(f.stream_matrix("s"), t.stream_matrix(7))
+
+
+# --------------------------------------------------------------------------- laziness / zero-copy
+def test_values_zero_copy_and_readonly():
+    eng = _rand_engine()
+    f = StatsFrame(eng)
+    v = f.values
+    assert np.shares_memory(v, eng._cum)
+    assert not v.flags.writeable
+    with pytest.raises(ValueError):
+        v[0, 0, 0] = 1
+    one = f.filter(stream=eng.streams()[0])
+    assert np.shares_memory(one.values, eng._cum)
+    assert one.values.shape[0] == 1
+    assert np.shares_memory(f.filter(view="pw").values, eng._pw)
+    assert np.shares_memory(f.filter(view="fail").values, eng._fail)
+    # axis filters can't be expressed as a raw store view — refuse rather
+    # than silently return unfiltered data (regression)
+    with pytest.raises(QueryError):
+        f.filter(outcome="MISS").values
+    with pytest.raises(QueryError):
+        f.filter(access_type="GLOBAL_ACC_R").values
+
+
+def test_frames_are_lazy_live_views():
+    eng = StatsEngine()
+    eng.record(0, 2, 1, 1, 0)
+    f = StatsFrame(eng).filter(stream=1, outcome="MISS")
+    assert f.sum() == 1
+    eng.record(0, 2, 1, 4, 1)  # frame built *before* this event
+    assert f.sum() == 5  # lazy: reads current engine state
+
+
+def test_filter_does_not_mutate_parent():
+    eng = _rand_engine()
+    f = StatsFrame(eng)
+    total = f.sum()
+    sub = f.filter(stream=0, access_type=0, outcome=2)
+    assert f.sum() == total
+    assert sub.sum() <= total
+
+
+# --------------------------------------------------------------------------- grouping / export
+def test_groupby_sums():
+    eng = _rand_engine()
+    f = StatsFrame(eng, names={"a": 0})
+    by_stream = f.groupby("stream").sum()
+    assert sum(by_stream.values()) == f.sum()
+    assert by_stream["a"] == f.filter(stream=0).sum()
+    by_outcome = f.groupby("outcome").sum()
+    assert sum(by_outcome.values()) == f.sum()
+    assert by_outcome["MISS"] == f.filter(outcome="MISS").sum()
+    by_type = f.groupby("access_type").sum()
+    assert sum(by_type.values()) == f.sum()
+    # groupby on a filtered frame only yields the selected groups
+    assert list(f.filter(outcome="MISS").groupby("outcome").sum()) == ["MISS"]
+
+
+def test_pivot():
+    eng = _rand_engine()
+    f = StatsFrame(eng, names={"a": 0, "b": 1})
+    rows, cols, table = f.pivot(rows="stream", cols="outcome")
+    assert table.sum() == f.sum()
+    r = rows.index("a")
+    c = cols.index("MISS")
+    assert table[r, c] == f.filter(stream="a", outcome="MISS").sum()
+    with pytest.raises(QueryError):
+        f.pivot(rows="stream", cols="stream")
+
+
+def test_pivot_kernel_axis_unions_columns():
+    # regression: row groups exposing different columns (each stream owns
+    # different kernels) must union, not KeyError on the first row's labels
+    res = simulate("producer_consumer", stages=2, keep_events=True)
+    rows, cols, table = res.frame.pivot(rows="stream", cols="kernel")
+    assert set(cols) == {"produce_0", "produce_1", "consume_0", "consume_1"}
+    assert table.sum() == res.frame.sum()
+    p = rows.index("producer")
+    assert table[p, cols.index("consume_0")] == 0  # not the producer's kernel
+    # and the transposed orientation works too
+    rows2, cols2, table2 = res.frame.pivot(rows="kernel", cols="stream")
+    assert table2.sum() == res.frame.sum()
+
+
+def test_to_dict_and_csv():
+    eng = StatsEngine()
+    eng.record(int(AccessType.GLOBAL_ACC_R), int(AccessOutcome.MISS), 3, 7, 1)
+    f = StatsFrame(eng, names={"s3": 3})
+    d = f.to_dict()
+    assert d == {"s3": {"GLOBAL_ACC_R": {"MISS": 7}}}
+    csv_text = f.to_csv()
+    assert "view,stream,access_type,outcome,count" in csv_text
+    assert "tip,s3,GLOBAL_ACC_R,MISS,7" in csv_text
+
+
+def test_outcome_counts_matches_oracle_math():
+    res = build("l2_lat", n_streams=3, n_loads=64).run(engine="event")
+    inst = build("l2_lat", n_streams=3, n_loads=64)
+    frame = inst.frame(res)
+    for sname, sid in inst.stream_ids.items():
+        if sname == "":
+            continue
+        m = res.stats.stream_matrix(sid)
+        got = frame.filter(stream=sname).outcome_counts()
+        assert got["HIT"] == int(m[:, AccessOutcome.HIT].sum())
+        assert got["MSHR_HIT"] == int(m[:, AccessOutcome.HIT_RESERVED].sum())
+        assert got["MISS"] == int(m[:, AccessOutcome.MISS].sum())
+        assert got["TOTAL"] == got["HIT"] + got["MSHR_HIT"] + got["MISS"]
+
+
+# --------------------------------------------------------------------------- timeline join
+def test_event_journal_counts_identical_to_plain_engine():
+    res_plain = simulate("producer_consumer", stages=2)
+    res_events = simulate("producer_consumer", stages=2, keep_events=True)
+    assert res_plain.signature() == res_events.signature()
+
+
+def test_during_kernel():
+    res = simulate("producer_consumer", stages=2, keep_events=True)
+    f = res.frame
+    # each producer kernel writes stage_lines MISSes during its own window
+    assert f.during("produce_0").filter(outcome="MISS").sum() == 32
+    assert f.during("consume_1").filter(outcome="HIT").sum() == 32
+    # stream filter composes with the window
+    assert f.during("produce_0").filter(stream="consumer").sum() == 0
+
+
+def test_groupby_kernel_partitions_stream_totals():
+    res = simulate("producer_consumer", stages=3, keep_events=True)
+    f = res.frame
+    per_kernel = f.groupby("kernel").sum()
+    assert set(per_kernel) == {
+        "produce_0", "produce_1", "produce_2", "consume_0", "consume_1", "consume_2",
+    }
+    prod_total = sum(v for k, v in per_kernel.items() if k.startswith("produce"))
+    assert prod_total == f.filter(stream="producer").sum()
+    assert sum(per_kernel.values()) == f.sum()
+
+
+def test_groupby_kernel_honors_stream_filter():
+    # regression: a stream-filtered frame must not report phantom
+    # zero-count groups for other streams' kernels
+    res = simulate("producer_consumer", stages=2, keep_events=True)
+    per_kernel = res.frame.filter(stream="producer").groupby("kernel").sum()
+    assert set(per_kernel) == {"produce_0", "produce_1"}
+    assert per_kernel["produce_0"] == 32
+
+
+def test_between_kernels_excludes_both():
+    res = simulate("producer_consumer", stages=2, keep_events=True)
+    f = res.frame
+    gap = f.between_kernels("produce_0", "consume_1", stream=None)
+    # everything in the gap on the producer stream is produce_1's work
+    w0 = f.kernel_window("produce_0")
+    w1 = f.kernel_window("consume_1")
+    manual = f.between_cycles(w0[1] + 1, w1[0] - 1).filter(stream="producer").sum()
+    assert gap.filter(stream="producer").sum() == manual
+
+
+def test_window_queries_require_events_and_timeline():
+    res = simulate("producer_consumer", stages=2)  # no keep_events
+    with pytest.raises(QueryError):
+        res.frame.during("produce_0")
+    eng = _rand_engine()
+    with pytest.raises(QueryError):
+        StatsFrame(eng).kernels()  # no timeline
+    ej = EventJournal()
+    ej.record(0, 2, 1, 1, 5)
+    with pytest.raises(QueryError):  # clean lanes cannot be windowed
+        StatsFrame(ej).between_cycles(0, 10).filter(view="clean").sum()
+
+
+def test_windowed_stream_matrix_honors_stream_filter():
+    # regression: a windowed frame's stream_matrix must not leak a
+    # filtered-out stream's counts (same zeros as the un-windowed path)
+    res = simulate("producer_consumer", stages=2, keep_events=True)
+    prod = res.stream_ids["producer"]
+    cons = res.stream_ids["consumer"]
+    f = res.frame.filter(stream=prod).between_cycles(0, res.cycles)
+    assert f.stream_matrix(cons).sum() == 0
+    assert np.array_equal(
+        res.frame.filter(stream=prod).stream_matrix(cons),
+        np.zeros_like(res.frame.stream_matrix(cons)),
+    )
+    # the selected stream still reads through the window
+    assert f.stream_matrix(prod).sum() == res.frame.filter(stream=prod).sum()
+
+
+def test_windowed_matrix_matches_manual_event_math():
+    ej = EventJournal()
+    ej.record(0, 2, 1, 5, 10)
+    ej.record(0, 2, 1, 3, 20)
+    ej.record(1, 0, 2, 7, 15)
+    ej.inc_stats(0, 2, 1, 100)  # no cycle -> never inside a window
+    f = StatsFrame(ej)
+    w = f.between_cycles(10, 15)
+    assert w.sum() == 12
+    assert w.filter(stream=1).sum() == 5
+    assert f.between_cycles(0, 9).sum() == 0
+    # window on pw view sees the same events
+    assert f.filter(view="pw").between_cycles(10, 15).sum() == 12
+
+
+# --------------------------------------------------------------------------- sink integration
+def test_stream_report_byte_identical_to_legacy_report():
+    res = build("deepbench").run(engine="event")
+    eng = res.stats
+    for sid in eng.streams():
+        legacy = Report(
+            source="sim",
+            event="kernel_exit",
+            stream_id=sid,
+            blocks=[
+                StatBlock("Total_core_cache_stats", eng.stream_matrix(sid)),
+                StatBlock(
+                    "Total_core_cache_fail_stats",
+                    eng.stream_matrix(sid, fail=True),
+                    fail=True,
+                ),
+            ],
+        )
+        framed = stream_report(
+            StatsFrame(eng, timeline=res.timeline),
+            sid,
+            source="sim",
+            event="kernel_exit",
+            cache_name="Total_core_cache_stats",
+            fail_cache_name="Total_core_cache_fail_stats",
+        )
+        assert render_text(framed) == render_text(legacy)
+
+
+def test_frame_block_marks_fail_axis():
+    eng = _rand_engine()
+    f = StatsFrame(eng)
+    b = frame_block(f, "X", stream=0, view="fail")
+    assert b.fail and np.array_equal(b.matrix, eng.stream_matrix(0, fail=True))
+    b2 = frame_block(f, "X", stream=0)
+    assert not b2.fail
+
+
+def test_legacy_print_stats_equals_frame_render():
+    res = build("deepbench").run(engine="event")
+    eng = res.stats
+    sid = eng.streams()[0]
+    buf = io.StringIO()
+    eng.print_stats(buf, sid)
+    legacy = buf.getvalue()
+    from repro.core.stats import format_breakdown
+
+    framed = format_breakdown(eng.name, sid, StatsFrame(eng).stream_matrix(sid))
+    assert framed == legacy
+
+
+# --------------------------------------------------------------------------- Session
+def test_session_launch_and_query():
+    s = Session(engine="event", keep_events=True)
+    s.stream("hi", priority=1)
+    s.launch("hi", rd_bytes=64 * 512, name="a0", record="e0")
+    s.launch("lo", wr_bytes=32 * 512, name="b0", wait="e0")
+    res = s.run()
+    assert res.frame.groupby("stream").sum() == {"hi": 64, "lo": 32}
+    assert res.frame.during("b0").filter(stream="lo").sum() == 32
+    # event wiring: b0 starts after a0 ends
+    assert res.frame.kernel_window("b0")[0] >= res.frame.kernel_window("a0")[1]
+    # a session runs once; a second run() returns the same result
+    assert s.run() is res
+    with pytest.raises(RuntimeError):
+        s.launch("hi", rd_bytes=512)
+
+
+def test_session_rejects_unknown_config_field():
+    with pytest.raises(TypeError):
+        Session(not_a_field=1)
+
+
+def test_session_launch_rejects_kernel_plus_builder_keywords():
+    # regression: builder keywords alongside kernel= were silently dropped
+    from repro.api import KernelDesc
+
+    s = Session()
+    kd = KernelDesc(name="k", hbm_rd_bytes=512, addr_base=1 << 20)
+    with pytest.raises(TypeError, match="rd_bytes"):
+        s.launch("a", kernel=kd, rd_bytes=1 << 20)
+    with pytest.raises(TypeError, match="name"):
+        s.launch("a", kernel=kd, name="other")
+    s.launch("a", kernel=kd)  # prebuilt alone is fine
+
+
+def test_session_rejects_conflicting_stream_priority():
+    # regression: a priority on an already-created stream cannot bind — fail
+    # loudly (the ScenarioInstance launch-row rule, imperative flavour)
+    s = Session()
+    s.launch("worker", rd_bytes=512)  # auto-creates "worker" at priority 0
+    with pytest.raises(ValueError):
+        s.stream("worker", priority=1)
+    assert s.stream("worker") == s.stream("worker", priority=0)  # same value ok
