@@ -1,0 +1,203 @@
+"""Mechanism-sweep benchmark: full-registry vector timing per miss-path mechanism.
+
+For every ``SimConfig.miss_mechanism`` in the tier's mechanism set, every
+registered scenario runs a fixed shape across ``DRAWS`` value-only
+Monte-Carlo draws (jittered ``max_cycles``) twice through
+:class:`repro.sim.batch.BatchRunner`:
+
+* **serial** — ``backend="pool"`` run serially: one full event-engine
+  simulation per draw, mechanism structures stepped cycle-by-cycle;
+* **vector** — ``backend="vector"`` with a **cold** trace cache: one
+  compile per (shape x mechanism) structural key, then lockstep replay.
+
+Every pair must be **bit-identical** on the full
+:meth:`BatchResult.signature` — mechanism state (victim/miss-cache/stream
+buffer contents, prefetch stat lanes) snapshots into the compiled trace, so
+a replay divergence here means the snapshot is stale.  Per-mechanism
+aggregate speedups are recorded as ``speedup_<mechanism>`` so
+``benchmarks/regress.py`` gates each mechanism's replay overhead
+independently (a regression in, say, stream-buffer snapshot size cannot
+hide behind the cheap "none" path).
+
+Writes ``BENCH_mechanism.json`` (repo root by default)::
+
+    PYTHONPATH=src python -m benchmarks.mechanism_sweep            # full tier
+    PYTHONPATH=src python -m benchmarks.mechanism_sweep --quick    # CI smoke tier
+
+Exit status is non-zero if any pair diverges or any per-mechanism speedup
+falls under the tier's floor.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.sim.batch import BatchJob, BatchRunner
+from repro.sim.compiled import TRACE_CACHE
+from repro.sim.resources import MISS_MECHANISMS
+from repro.sim.scenarios import list_scenarios, value_only_draws
+
+from .common import csv_line
+
+#: per-mechanism aggregate vector-vs-serial speedup floor (CI gate)
+TARGET_SPEEDUP = 8.0
+#: loose floor for the quick smoke tier (small draws amortize less compile)
+QUICK_TARGET_SPEEDUP = 2.0
+#: value-only draws per (scenario shape x mechanism)
+DRAWS = 24
+QUICK_DRAWS = 8
+
+MECHANISMS = MISS_MECHANISMS
+QUICK_MECHANISMS = ("none", "victim", "stream_buffer")
+
+# One fixed mid-weight shape per registered scenario — smaller than
+# benchmarks/sim_compiled.py's rows (this sweep multiplies by the mechanism
+# axis) but heavy enough that replay overhead stays well below a serial
+# run.  _missing() guards that new scenarios get a row here.
+SWEEP = [
+    ("l2_lat", dict(n_loads=4096, n_streams=4)),
+    ("mixed_stream", dict(n=1 << 15)),
+    ("deepbench", dict(repeats=24, n_streams=3)),
+    ("cache_thrash", dict(arr_lines=64, passes=12)),
+    ("producer_consumer", dict(stages=12, stage_lines=128)),
+    ("mps_like", dict(tenants=4, kernels_each=12, rd_kb=1024)),
+    ("poisson_burst", dict(servers=4, bursts=8, seed=0)),
+    ("straggler", dict(long_lines=65536, short_kernels=12)),
+    ("priority_preemption", dict(hi_kernels=12, lo_streams=3, lo_kernels=6,
+                                 kb_per_kernel=512)),
+    ("copy_compute_overlap", dict(chunks=12, chunk_kb=512)),
+    ("fork_join", dict(rounds=6, width=4, work_kb=512)),
+]
+QUICK_SWEEP = [
+    ("l2_lat", dict(n_loads=1024, n_streams=4)),
+    ("cache_thrash", dict(arr_lines=32, passes=6)),
+    ("producer_consumer", dict(stages=8, stage_lines=128)),
+]
+
+
+def _missing() -> set:
+    return set(list_scenarios()) - {name for name, _ in SWEEP}
+
+
+def mechanism_jobs(name: str, params: dict, mechanism: str, draws: int):
+    """``draws`` value-only jobs of one shape with ``mechanism`` active."""
+    return [
+        BatchJob.make(name, params, engine="event",
+                      config={**cfg, "miss_mechanism": mechanism})
+        for cfg in value_only_draws(draws, seed=draws)
+    ]
+
+
+def bench_mechanism(mechanism: str, sweep, draws: int) -> dict:
+    serial_s = vector_s = 0.0
+    identical = True
+    oracle_failures = 0
+    for name, params in sweep:
+        jobs = mechanism_jobs(name, params, mechanism, draws)
+        t0 = time.perf_counter()
+        serial = BatchRunner(jobs).run(parallel=False)
+        serial_s += time.perf_counter() - t0
+
+        TRACE_CACHE.clear()  # cold cache: vector wall includes the compile
+        t0 = time.perf_counter()
+        vector = BatchRunner(jobs, backend="vector").run(parallel=False)
+        vector_s += time.perf_counter() - t0
+
+        identical &= serial.signature() == vector.signature()
+        # mechanism-aware oracles ride along in every payload; a non-ok
+        # check here fails the benchmark the same way divergence does
+        for res in (serial, vector):
+            oracle_failures += sum(
+                1 for p in res.payloads
+                if p.get("oracle") is not None and not p["oracle"]["ok"]
+            )
+    speedup = serial_s / vector_s if vector_s else float("inf")
+    csv_line(
+        f"mechanism_sweep_{mechanism}",
+        vector_s / max(len(sweep) * draws, 1) * 1e6,
+        f"serial={serial_s*1e3:.0f}ms vector={vector_s*1e3:.0f}ms "
+        f"speedup={speedup:.1f}x identical={identical} "
+        f"oracle_failures={oracle_failures}",
+    )
+    return {
+        "serial_s": round(serial_s, 4),
+        "vector_s": round(vector_s, 4),
+        "speedup": round(speedup, 2),
+        "identical": identical,
+        "oracle_failures": oracle_failures,
+    }
+
+
+def run(quick: bool = False) -> dict:
+    if _missing():
+        raise RuntimeError(
+            f"scenarios missing a benchmark shape: {sorted(_missing())} — "
+            "add rows to benchmarks/mechanism_sweep.py::SWEEP"
+        )
+    sweep = QUICK_SWEEP if quick else SWEEP
+    draws = QUICK_DRAWS if quick else DRAWS
+    mechs = QUICK_MECHANISMS if quick else MECHANISMS
+    target = QUICK_TARGET_SPEEDUP if quick else TARGET_SPEEDUP
+    per_mech = {}
+    for mech in mechs:
+        per_mech[mech] = bench_mechanism(mech, sweep, draws)
+    identical = all(m["identical"] for m in per_mech.values())
+    clean = all(m["oracle_failures"] == 0 for m in per_mech.values())
+    floor = min(m["speedup"] for m in per_mech.values())
+    ok = identical and clean and floor >= target
+    csv_line(
+        "mechanism_sweep_registry",
+        sum(m["vector_s"] for m in per_mech.values()) * 1e6,
+        f"min_speedup={floor:.1f}x target>={target} identical={identical} "
+        f"oracles_clean={clean}",
+    )
+    payload = {
+        "ok": ok,
+        "mode": "quick" if quick else "full",
+        "draws_per_shape": draws,
+        "n_shapes": len(sweep),
+        "mechanisms": sorted(mechs),
+        "min_speedup": round(floor, 2),
+        "target_speedup": target,
+        "identical": identical,
+        "oracles_clean": clean,
+        "per_mechanism": per_mech,
+    }
+    # flat speedup_<mech> keys: benchmarks/regress.py walks `speedup_*`
+    for mech, row in per_mech.items():
+        payload[f"speedup_{mech.replace('+', '_')}"] = row["speedup"]
+    return payload
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI smoke tier (fewer shapes/draws/mechanisms)")
+    ap.add_argument(
+        "--out",
+        default=os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                             "BENCH_mechanism.json"),
+        help="where to write the JSON trajectory (default: repo root)",
+    )
+    args = ap.parse_args()
+    payload = run(quick=args.quick)
+    payload["benchmark"] = "mechanism_sweep"
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    if not payload["ok"]:
+        print(
+            "FAIL: vector replay diverged, a mechanism oracle failed, or a "
+            f"per-mechanism speedup fell under {payload['target_speedup']}x",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,6 +29,7 @@ def main() -> None:
         batch_speed,
         fig2_l2lat,
         fig34_mixed,
+        mechanism_sweep,
         query_overhead,
         sim_compiled,
         sim_speed,
@@ -69,6 +70,8 @@ def main() -> None:
     section("sim_compiled", sim_compiled.run(quick=True))
     print("\n=== Batch runner: pooled scenario sweep vs serial fallback ===")
     section("batch_speed", batch_speed.run(quick=True))
+    print("\n=== Miss-path mechanisms: vector sweep vs serial, per mechanism ===")
+    section("mechanism", mechanism_sweep.run(quick=True))
     print("\n=== Fig 2: l2_lat 4-stream (tip / clean / serialized) ===")
     results.append(("fig2", fig2_l2lat.run()["ok"]))
     print("\n=== Fig 3: mixed kernels, 1 side stream ===")

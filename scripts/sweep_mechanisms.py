@@ -1,0 +1,214 @@
+"""Mechanism geometry-sweep driver (ISSUE 6 tentpole artifact).
+
+Sweeps every registered scenario across the miss-path mechanism zoo
+(``SimConfig.miss_mechanism``) and a small geometry grid per mechanism
+(victim/miss-cache entries, stream-buffer count x depth) on
+:class:`repro.sim.batch.BatchRunner`, then emits **normalized** artifacts
+comparing mechanisms:
+
+* ``artifacts/sweeps/mechanisms.csv`` — one row per
+  (scenario x mechanism x geometry): raw cycles + demand outcome counts
+  (including the mechanism stat lanes), plus ``cycles_norm`` and
+  ``miss_norm`` — the ratio against that scenario's ``miss_mechanism="none"``
+  baseline, so rows are comparable across scenarios of very different size;
+* ``artifacts/sweeps/mechanisms.png`` — grouped bars of ``cycles_norm`` per
+  scenario at each mechanism's default geometry (skipped with a notice when
+  matplotlib is unavailable, or under ``--no-plot``).
+
+Every job's per-stream oracle (mechanism-aware where registered) is
+verified inline by the batch layer; any failure exits non-zero.
+
+    PYTHONPATH=src python scripts/sweep_mechanisms.py
+    PYTHONPATH=src python scripts/sweep_mechanisms.py --backend pool --workers 4
+    PYTHONPATH=src python scripts/sweep_mechanisms.py --scenarios l2_lat,cache_thrash
+"""
+
+import argparse
+import csv
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import numpy as np
+
+from repro.core.stats import AccessOutcome, AccessType
+from repro.sim.batch import BatchJob, BatchRunner
+from repro.sim.resources import MISS_MECHANISMS
+from repro.sim.scenarios import list_scenarios
+
+#: geometry grid per mechanism: (label, SimConfig overrides).  The first
+#: point of each mechanism is its SimConfig-default geometry — the point
+#: the summary plot compares.
+GEOMETRY_GRID = {
+    "none": [("baseline", {})],
+    "victim": [
+        ("ve=8", {"victim_entries": 8}),
+        ("ve=4", {"victim_entries": 4}),
+        ("ve=16", {"victim_entries": 16}),
+        ("ve=64", {"victim_entries": 64}),
+    ],
+    "miss_cache": [
+        ("mc=8", {"miss_cache_entries": 8}),
+        ("mc=4", {"miss_cache_entries": 4}),
+        ("mc=16", {"miss_cache_entries": 16}),
+        ("mc=64", {"miss_cache_entries": 64}),
+    ],
+    "stream_buffer": [
+        ("sb=4x4", {"stream_buffers": 4, "stream_buffer_depth": 4}),
+        ("sb=1x4", {"stream_buffers": 1, "stream_buffer_depth": 4}),
+        ("sb=2x1", {"stream_buffers": 2, "stream_buffer_depth": 1}),
+        ("sb=8x8", {"stream_buffers": 8, "stream_buffer_depth": 8}),
+    ],
+    "victim+stream": [
+        ("ve=8,sb=4x4", {"victim_entries": 8, "stream_buffers": 4,
+                         "stream_buffer_depth": 4}),
+        ("ve=32,sb=2x2", {"victim_entries": 32, "stream_buffers": 2,
+                          "stream_buffer_depth": 2}),
+    ],
+}
+
+COUNT_KEYS = ("HIT", "MSHR_HIT", "MISS", "RES_FAIL", "VICTIM_HIT",
+              "MISS_CACHE_HIT", "PREFETCH_HIT", "PREFETCH_ISSUED", "TOTAL")
+
+
+def payload_counts(payload):
+    """Aggregate outcome counts over all streams of one job payload,
+    mirroring StatsFrame.outcome_counts() key conventions (demand rows
+    exclude the PREFETCH traffic row, which sums to PREFETCH_ISSUED)."""
+    total = None
+    for views in payload["signature"]["stats"]["streams"].values():
+        m = np.asarray(views["cum"], dtype=np.int64)
+        total = m if total is None else total + m
+    assert total is not None, "payload with no stream rows"
+
+    def col(out):
+        return int(total[:, int(out)].sum()) if int(out) < total.shape[1] else 0
+
+    pf_row = int(AccessType.PREFETCH)
+    pf_issued = int(total[pf_row].sum()) if pf_row < total.shape[0] else 0
+    if pf_row < total.shape[0]:
+        total = np.delete(total, pf_row, axis=0)
+    out = {
+        "HIT": col(AccessOutcome.HIT),
+        "MSHR_HIT": col(AccessOutcome.HIT_RESERVED),
+        "MISS": col(AccessOutcome.MISS),
+        "RES_FAIL": col(AccessOutcome.RESERVATION_FAILURE),
+        "VICTIM_HIT": col(AccessOutcome.VICTIM_HIT),
+        "MISS_CACHE_HIT": col(AccessOutcome.MISS_CACHE_HIT),
+        "PREFETCH_HIT": col(AccessOutcome.PREFETCH_HIT),
+        "PREFETCH_ISSUED": pf_issued,
+    }
+    out["TOTAL"] = (out["HIT"] + out["MSHR_HIT"] + out["MISS"]
+                    + out["VICTIM_HIT"] + out["MISS_CACHE_HIT"]
+                    + out["PREFETCH_HIT"])
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenarios", default=None,
+                    help="comma-separated subset (default: whole registry)")
+    ap.add_argument("--mechanisms", default=",".join(MISS_MECHANISMS),
+                    help="comma-separated mechanism subset")
+    ap.add_argument("--engine", default="event",
+                    choices=("cycle", "event", "compiled"))
+    ap.add_argument("--backend", default="vector", choices=("pool", "vector"))
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--serial", action="store_true",
+                    help="run the batch serially (debugging)")
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "artifacts", "sweeps"))
+    ap.add_argument("--no-plot", action="store_true")
+    args = ap.parse_args()
+
+    names = ([s.strip() for s in args.scenarios.split(",") if s.strip()]
+             if args.scenarios else list(list_scenarios()))
+    mechs = [m.strip() for m in args.mechanisms.split(",") if m.strip()]
+    for m in mechs:
+        if m not in MISS_MECHANISMS:
+            print(f"unknown mechanism {m!r}; expected from {MISS_MECHANISMS}",
+                  file=sys.stderr)
+            return 2
+    if "none" not in mechs:
+        mechs.insert(0, "none")  # the normalization baseline is not optional
+
+    jobs, meta = [], []
+    for name in names:
+        for mech in mechs:
+            for label, geom in GEOMETRY_GRID[mech]:
+                jobs.append(BatchJob.make(
+                    name, None, engine=args.engine,
+                    config={"miss_mechanism": mech, **geom}))
+                meta.append((name, mech, label))
+
+    runner = BatchRunner(jobs, backend=args.backend, workers=args.workers)
+    result = runner.run(parallel=not args.serial)
+    fails = [p["oracle"] for p in result.payloads
+             if p.get("oracle") is not None and not p["oracle"]["ok"]]
+    print(f"swept {len(jobs)} jobs ({len(names)} scenarios x {mechs} x geometry) "
+          f"via the {args.backend!r} backend: {result.wall_s:.2f}s")
+    if fails:
+        print(f"ORACLE FAILURES: {fails[:3]}{' ...' if len(fails) > 3 else ''}",
+              file=sys.stderr)
+        return 1
+
+    # baseline per scenario: the mandatory "none" row
+    rows, baseline = [], {}
+    for (name, mech, label), payload in zip(meta, result.payloads):
+        counts = payload_counts(payload)
+        row = {"scenario": name, "mechanism": mech, "geometry": label,
+               "cycles": payload["cycles"], **counts}
+        rows.append(row)
+        if mech == "none":
+            baseline[name] = row
+    for row in rows:
+        base = baseline[row["scenario"]]
+        row["cycles_norm"] = round(row["cycles"] / base["cycles"], 4)
+        row["miss_norm"] = (round(row["MISS"] / base["MISS"], 4)
+                            if base["MISS"] else "")
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    csv_path = os.path.join(args.out_dir, "mechanisms.csv")
+    fields = (["scenario", "mechanism", "geometry", "cycles", "cycles_norm",
+               "miss_norm"] + list(COUNT_KEYS))
+    with open(csv_path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=fields)
+        w.writeheader()
+        w.writerows(rows)
+    print(f"wrote {csv_path} ({len(rows)} rows)")
+
+    if not args.no_plot:
+        try:
+            import matplotlib
+            matplotlib.use("Agg")
+            import matplotlib.pyplot as plt
+        except Exception as exc:  # matplotlib is an optional artifact dep
+            print(f"plot skipped (matplotlib unavailable: {exc})")
+            return 0
+        # default-geometry point of each mechanism, grouped by scenario
+        default_rows = [r for r in rows
+                        if r["geometry"] == GEOMETRY_GRID[r["mechanism"]][0][0]]
+        x = np.arange(len(names))
+        width = 0.8 / len(mechs)
+        fig, ax = plt.subplots(figsize=(max(8, 1.2 * len(names)), 4.5))
+        for i, mech in enumerate(mechs):
+            ys = [next(r["cycles_norm"] for r in default_rows
+                       if r["scenario"] == n and r["mechanism"] == mech)
+                  for n in names]
+            ax.bar(x + (i - len(mechs) / 2 + 0.5) * width, ys, width, label=mech)
+        ax.axhline(1.0, color="k", lw=0.8, ls="--")
+        ax.set_xticks(x, names, rotation=30, ha="right")
+        ax.set_ylabel("cycles / cycles(none)")
+        ax.set_title(f"Miss-path mechanisms, default geometry ({args.engine} engine)")
+        ax.legend(fontsize=8)
+        fig.tight_layout()
+        png_path = os.path.join(args.out_dir, "mechanisms.png")
+        fig.savefig(png_path, dpi=120)
+        print(f"wrote {png_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

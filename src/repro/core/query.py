@@ -593,11 +593,16 @@ class StatsFrame:
 
     def outcome_counts(self) -> Dict[str, int]:
         """The scenario-oracle key convention in one call:
-        ``{"HIT", "MSHR_HIT", "MISS", "RES_FAIL", "TOTAL"}`` summed over the
-        selected streams/types (``TOTAL`` = HIT + MSHR_HIT + MISS; failures
-        retry, so they are excluded — see ``repro.sim.scenarios``).  Only
-        meaningful on an access-outcome axis: fail views (whose columns are
-        ``FailOutcome`` reasons) are rejected."""
+        ``{"HIT", "MSHR_HIT", "MISS", "RES_FAIL", "VICTIM_HIT",
+        "MISS_CACHE_HIT", "PREFETCH_HIT", "PREFETCH_ISSUED", "TOTAL"}``
+        summed over the selected streams/types.  ``TOTAL`` counts each
+        successful demand access once — HIT + MSHR_HIT + MISS plus the three
+        miss-path mechanism hit lanes — so it is mechanism-invariant;
+        failures retry, so they are excluded (see ``repro.sim.scenarios``).
+        ``PREFETCH_ISSUED`` sums the :data:`AccessType.PREFETCH` traffic
+        row, which is excluded from every demand key.  Only meaningful on an
+        access-outcome axis: fail views (whose columns are ``FailOutcome``
+        reasons) are rejected."""
         if self._view in ("fail", "clean_fail"):
             raise QueryError(
                 f"outcome_counts() reads AccessOutcome columns; view {self._view!r} "
@@ -605,13 +610,34 @@ class StatsFrame:
                 "RESERVATION_FAILURE column)"
             )
         m = self.matrix()
+
+        def col(out):
+            # zero column for tables predating an outcome's introduction
+            if int(out) >= m.shape[1]:
+                return np.zeros(m.shape[0], dtype=m.dtype)
+            return m[:, int(out)]
+
+        pf_row = int(AccessType.PREFETCH)
+        demand = np.ones(m.shape[0], dtype=bool)
+        if pf_row < m.shape[0]:
+            pf_issued = int(m[pf_row].sum())
+            demand[pf_row] = False
+        else:
+            pf_issued = 0
         got = {
-            "HIT": int(m[:, AccessOutcome.HIT].sum()),
-            "MSHR_HIT": int(m[:, AccessOutcome.HIT_RESERVED].sum()),
-            "MISS": int(m[:, AccessOutcome.MISS].sum()),
-            "RES_FAIL": int(m[:, AccessOutcome.RESERVATION_FAILURE].sum()),
+            "HIT": int(col(AccessOutcome.HIT)[demand].sum()),
+            "MSHR_HIT": int(col(AccessOutcome.HIT_RESERVED)[demand].sum()),
+            "MISS": int(col(AccessOutcome.MISS)[demand].sum()),
+            "RES_FAIL": int(col(AccessOutcome.RESERVATION_FAILURE)[demand].sum()),
+            "VICTIM_HIT": int(col(AccessOutcome.VICTIM_HIT)[demand].sum()),
+            "MISS_CACHE_HIT": int(col(AccessOutcome.MISS_CACHE_HIT)[demand].sum()),
+            "PREFETCH_HIT": int(col(AccessOutcome.PREFETCH_HIT)[demand].sum()),
+            "PREFETCH_ISSUED": pf_issued,
         }
-        got["TOTAL"] = got["HIT"] + got["MSHR_HIT"] + got["MISS"]
+        got["TOTAL"] = (
+            got["HIT"] + got["MSHR_HIT"] + got["MISS"]
+            + got["VICTIM_HIT"] + got["MISS_CACHE_HIT"] + got["PREFETCH_HIT"]
+        )
         return got
 
     # -- grouping -----------------------------------------------------------------------

@@ -75,6 +75,10 @@ class AccessType(enum.IntEnum):
     ICI_SND = 5
     ICI_RCV = 6
     VMEM_WRBK = 7
+    #: stream-buffer prefetch traffic (one event per prefetched line),
+    #: attributed to the stream whose demand miss triggered the prefetch —
+    #: this row is *traffic*, not demand, so demand-side views exclude it
+    PREFETCH = 8
 
     @classmethod
     def count(cls) -> int:
@@ -92,6 +96,16 @@ class AccessOutcome(enum.IntEnum):
     SECTOR_MISS   — partial-line fetch (kept for table parity; the TPU model
                     fetches whole 512B lines so this stays 0 unless a
                     workload issues sub-line accesses)
+
+    Miss-path mechanism outcomes (``SimConfig.miss_mechanism``, see
+    docs/DESIGN.md §5.10) — each counts an access the main array missed but
+    a mechanism structure satisfied, so a demand access lands in exactly one
+    of {HIT, HIT_RESERVED, MISS, VICTIM_HIT, MISS_CACHE_HIT, PREFETCH_HIT}
+    per successful issue (RESERVATION_FAILURE retries):
+
+    VICTIM_HIT      — found in the victim cache (recently evicted line)
+    MISS_CACHE_HIT  — found in the miss cache (recently missed line)
+    PREFETCH_HIT    — matched the head of a stream buffer (prefetched line)
     """
 
     HIT = 0
@@ -99,6 +113,9 @@ class AccessOutcome(enum.IntEnum):
     MISS = 2
     RESERVATION_FAILURE = 3
     SECTOR_MISS = 4
+    VICTIM_HIT = 5
+    MISS_CACHE_HIT = 6
+    PREFETCH_HIT = 7
 
     @classmethod
     def count(cls) -> int:
@@ -112,6 +129,9 @@ _OUTCOME_NAMES = {
     AccessOutcome.MISS: "MISS",
     AccessOutcome.RESERVATION_FAILURE: "RESERVATION_FAIL",
     AccessOutcome.SECTOR_MISS: "SECTOR_MISS",
+    AccessOutcome.VICTIM_HIT: "VICTIM_HIT",
+    AccessOutcome.MISS_CACHE_HIT: "MISS_CACHE_HIT",
+    AccessOutcome.PREFETCH_HIT: "PREFETCH_HIT",
 }
 
 

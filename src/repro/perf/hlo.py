@@ -189,6 +189,10 @@ def summarize_compiled(compiled, hlo_text: Optional[str] = None) -> HloCostSumma
         ca = compiled.cost_analysis() or {}
     except Exception:
         ca = {}
+    # jax <= 0.4.x returns a list with one dict per program; newer jax
+    # returns the dict directly.  Normalize to the dict.
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
     text = hlo_text if hlo_text is not None else compiled.as_text()
     colls = parse_collectives(text)
     breakdown: Dict[str, float] = defaultdict(float)

@@ -116,10 +116,12 @@ class BatchJob:
         )
 
 
-def _oracle_check(inst: ScenarioInstance, res) -> Optional[Dict[str, object]]:
+def _oracle_check(job: BatchJob, inst: ScenarioInstance, res) -> Optional[Dict[str, object]]:
     """Inline conformance — a declarative StatsFrame query per expected
-    stream (see :meth:`repro.sim.scenarios.ScenarioInstance.check_oracle`)."""
-    return inst.check_oracle(res)
+    stream (see :meth:`repro.sim.scenarios.ScenarioInstance.check_oracle`).
+    The job's config rides along so mechanism-aware oracles
+    (``miss_mechanism != "none"``) check the adjusted expectation."""
+    return inst.check_oracle(res, config=job.sim_config())
 
 
 def _payload(job: BatchJob, inst: ScenarioInstance, res) -> Dict[str, object]:
@@ -131,7 +133,7 @@ def _payload(job: BatchJob, inst: ScenarioInstance, res) -> Dict[str, object]:
         "config": {k: dict(v) if k == "stream_slowdown" else v for k, v in job.config},
         "cycles": res.cycles,
         "stream_ids": dict(inst.stream_ids),
-        "oracle": _oracle_check(inst, res),
+        "oracle": _oracle_check(job, inst, res),
         "signature": res.signature(),
     }
 

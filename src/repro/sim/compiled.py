@@ -77,7 +77,7 @@ __all__ = [
 ]
 
 #: bump when the CompiledTrace layout or key contents change
-_KEY_VERSION = "cc-trace-v1"
+_KEY_VERSION = "cc-trace-v2"
 
 
 def _engine_ctor_kwargs() -> dict:
@@ -151,10 +151,11 @@ class CompiledTrace:
     stream_flags: Tuple
     fired_events: Tuple[int, ...]
     #: final VMEMCache state — (lines [(tag, dirty, last_use) in LRU order],
-    #: mshr [(tag, ready, streams)], heap entries, next mshr seq).  Restored
-    #: lazily, and only when a replayed simulator is *resumed* with new work
-    #: (replay itself never pays for it).
-    cache_state: Tuple = ((), (), (), 0)
+    #: mshr [(tag, ready, streams)], heap entries, next mshr seq, miss-path
+    #: mechanism snapshot or None).  Restored lazily, and only when a
+    #: replayed simulator is *resumed* with new work (replay itself never
+    #: pays for it).
+    cache_state: Tuple = ((), (), (), 0, None)
     compile_seconds: float = 0.0
 
     @property
@@ -251,6 +252,7 @@ def _compile(sim: TPUSimulator) -> Tuple[CompiledTrace, SimResult]:
         tuple((tag, rc, tuple(streams)) for tag, (rc, streams) in cache._mshr.items()),
         tuple(cache._mshr_heap),
         next(cache._mshr_seq),  # consuming one keeps future seqs larger
+        cache.mech_state(),  # miss-path mechanism structures (None for "none")
     )
     trace = CompiledTrace(
         key=(),  # filled by get_or_compile (the key was computed pre-run)
@@ -433,13 +435,14 @@ def _restore_cache(cache, state: Tuple) -> None:
 
     from .resources import _Line
 
-    lines, mshr, heap, seq_next = state
+    lines, mshr, heap, seq_next = state[:4]
     cache._lines.clear()
     for tag, dirty, last_use in lines:
         cache._lines[tag] = _Line(tag, dirty, last_use)
     cache._mshr = {tag: (rc, list(streams)) for tag, rc, streams in mshr}
     cache._mshr_heap = [tuple(e) for e in heap]  # already heap-ordered
     cache._mshr_seq = itertools.count(seq_next)
+    cache.mech_restore(state[4] if len(state) > 4 else None)
 
 
 # --------------------------------------------------------------------------- identity

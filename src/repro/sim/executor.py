@@ -85,6 +85,16 @@ class SimConfig:
     mshr_entries: int = 2048  # DMA engines track thousands of in-flight lines
     mshr_max_merge: int = 8
     bw_stall_horizon: int = 4096  # HBM queue depth before issue stalls
+    #: miss-path mechanism between a VMEMCache miss and HBM (docs/DESIGN.md
+    #: §5.10): "none" (bit-identical to the pre-mechanism simulator),
+    #: "victim", "miss_cache", "stream_buffer", or "victim+stream".  These
+    #: five fields are structural — they join structural_key(), so the
+    #: compiled-trace cache never replays a stale mechanism config.
+    miss_mechanism: str = "none"
+    victim_entries: int = 8
+    miss_cache_entries: int = 8
+    stream_buffers: int = 4
+    stream_buffer_depth: int = 4
     max_cycles: int = 50_000_000
     max_synth_beats: int = 4096  # beat granularity for aggregate-cost kernels
     #: straggler injection: stream_id -> slowdown factor (>1 = slower)
@@ -342,7 +352,18 @@ class TPUSimulator:
             mshr_entries=self.cfg.mshr_entries,
             mshr_max_merge=self.cfg.mshr_max_merge,
             bw_stall_horizon=self.cfg.bw_stall_horizon,
+            miss_mechanism=self.cfg.miss_mechanism,
+            victim_entries=self.cfg.victim_entries,
+            miss_cache_entries=self.cfg.miss_cache_entries,
+            stream_buffers=self.cfg.stream_buffers,
+            stream_buffer_depth=self.cfg.stream_buffer_depth,
+            hit_latency=self.cfg.vmem_hit_latency,
         )
+        if self.cache.miss_path is not None:
+            # Prefetch traffic lands on the PREFETCH stat row through the
+            # same late-bound path as demand events, so the compiled-trace
+            # recorder swap (which reassigns self.engine) captures it too.
+            self.cache.miss_path.record = self._count
         self.log: List[str] = []
         self._active: List[_Run] = []
         self._n_synth = 0  # active runs without an explicit trace (FF-eligible)

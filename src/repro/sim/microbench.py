@@ -43,7 +43,14 @@ from .kernel_desc import (
     pointer_chase_trace,
     streaming_trace,
 )
-from .scenarios import Launch, build, scenario
+from .scenarios import (
+    Launch,
+    build,
+    mech_invariant_oracle,
+    mech_totals_only_oracle,
+    register_mech_oracle,
+    scenario,
+)
 
 __all__ = [
     "l2_lat_multistream",
@@ -364,3 +371,13 @@ def deepbench_like_workload(
         )
         sim.launch(streams[i % n_streams].stream_id, kd_i)
     return sim.run()
+
+
+# Mechanism-aware oracles (docs/DESIGN.md §5.10): l2_lat and mixed_stream
+# are explicit-trace workloads whose hit/miss split depends on the miss-path
+# mechanism (a stream buffer turns sequential-line misses into prefetch
+# hits), but their per-stream TOTALs are conserved; deepbench is purely
+# synthesized, so every mechanism is provably inert.
+register_mech_oracle("l2_lat", mech_totals_only_oracle)
+register_mech_oracle("mixed_stream", mech_totals_only_oracle)
+register_mech_oracle("deepbench", mech_invariant_oracle)

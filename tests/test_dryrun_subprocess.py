@@ -13,6 +13,10 @@ ENV = {
     "PYTHONPATH": "src",
     "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
     "HOME": os.environ.get("HOME", "/root"),
+    # Force the CPU backend: without this, jax's TPU autodetection can hang
+    # the child process on hosts with a partially-visible accelerator (the
+    # same pin tests/test_pipeline.py uses for its subprocesses).
+    "JAX_PLATFORMS": "cpu",
 }
 
 

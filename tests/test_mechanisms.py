@@ -1,0 +1,304 @@
+"""Tri-engine differential + golden suite for the VMEMCache miss-path
+mechanism zoo (``SimConfig.miss_mechanism``).
+
+Proves the ISSUE-6 acceptance criteria directly:
+
+* **Tri-engine identity** — ``cycle.signature() == event.signature() ==
+  compiled.signature()`` for every mechanism x registry scenario, and over
+  hypothesis draws of mechanism geometry (victim/miss-cache entries, stream
+  buffer count and depth).  The event engine's fast-forward windows and the
+  compiled engine's trace snapshots must both carry mechanism state exactly.
+* **"none" bit-identity** — the default config reproduces the pre-mechanism
+  golden cycles/splits, reports zero on every new stat lane, and is unmoved
+  by mechanism *geometry* fields while ``miss_mechanism="none"``.
+* **Golden mechanism tables** — checked-in cycle counts and per-stream
+  outcome splits for representative mechanism configs (empirically frozen;
+  a timing or attribution change cannot slip through as a matched pair of
+  engine regressions).
+* **Compiled-cache invalidation** — mechanism/geometry changes are
+  *structural* (new compile), ``VALUE_ONLY_CONFIG`` changes replay.
+
+The engine set honors ``SCENARIO_ENGINES`` and the mechanism set honors
+``MECHANISMS`` (comma-separated) so CI can run an engine x mechanism
+conformance matrix; single-engine runs still pin goldens per engine.
+"""
+
+import os
+import random
+
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.sim.compiled import TRACE_CACHE
+from repro.sim.executor import SimConfig
+from repro.sim.resources import MISS_MECHANISMS, Bandwidth, VMEMCache
+from repro.sim.scenarios import build, list_scenarios
+
+ENGINES = tuple(
+    e.strip()
+    for e in os.environ.get("SCENARIO_ENGINES", "cycle,event,compiled").split(",")
+    if e.strip()
+)
+MECHANISMS = tuple(
+    m.strip()
+    for m in os.environ.get("MECHANISMS", ",".join(MISS_MECHANISMS)).split(",")
+    if m.strip()
+)
+
+MECH_LANES = ("VICTIM_HIT", "MISS_CACHE_HIT", "PREFETCH_HIT", "PREFETCH_ISSUED")
+
+#: Pre-mechanism golden cycles (mirrors tests/test_scenarios.py) — the
+#: ``miss_mechanism="none"`` bit-identity reference.
+GOLDEN_CYCLES_NONE = {
+    "cache_thrash": 9602,
+    "copy_compute_overlap": 798,
+    "deepbench": 5133,
+    "fork_join": 163,
+    "l2_lat": 608,
+    "mixed_stream": 240,
+    "mps_like": 576,
+    "poisson_burst": 132,
+    "priority_preemption": 128,
+    "producer_consumer": 725,
+    "straggler": 512,
+}
+
+#: Golden total cycles for mechanism configs at scenario defaults.
+#: cache_thrash is the mechanism-sensitive workload (two chase streams
+#: LRU-thrashing a 32-line cache); mixed_stream's near-lockstep sharing is
+#: MSHR-dominated, so every mechanism leaves its cycle count untouched.
+GOLDEN_MECH_CYCLES = {
+    # (scenario, mechanism, geometry overrides) -> total cycles
+    ("cache_thrash", "none", ()): 9602,
+    ("cache_thrash", "victim", ()): 9602,           # 8 entries << 32-line reuse
+    ("cache_thrash", "miss_cache", ()): 9602,       # 8 entries << 64-line miss stream
+    ("cache_thrash", "stream_buffer", ()): 2126,    # sequential chase: prefetch covers
+    ("cache_thrash", "victim+stream", ()): 2126,
+    ("cache_thrash", "victim", (("victim_entries", 32),)): 3714,
+    ("cache_thrash", "victim", (("victim_entries", 64),)): 3714,
+    ("cache_thrash", "miss_cache", (("miss_cache_entries", 64),)): 3714,
+    ("cache_thrash", "stream_buffer", (("stream_buffers", 1),)): 9602,  # ping-pong
+    ("cache_thrash", "stream_buffer", (("stream_buffers", 2), ("stream_buffer_depth", 1))): 4826,
+    ("mixed_stream", "none", ()): 240,
+    ("mixed_stream", "victim", ()): 240,
+    ("mixed_stream", "miss_cache", ()): 240,
+    ("mixed_stream", "stream_buffer", ()): 240,
+    ("mixed_stream", "victim+stream", ()): 240,
+}
+
+#: Golden per-stream outcome splits for mechanism configs (only rows whose
+#: keys are asserted; unlisted lanes are implicitly pinned to the values in
+#: the dict — every listed dict is compared key-by-key).
+GOLDEN_MECH_SPLITS = {
+    ("cache_thrash", "stream_buffer", ()): {
+        "thrash_a": {"MISS": 3, "PREFETCH_HIT": 93, "PREFETCH_ISSUED": 105,
+                     "VICTIM_HIT": 0, "MISS_CACHE_HIT": 0, "TOTAL": 96},
+        "thrash_b": {"MISS": 3, "PREFETCH_HIT": 93, "PREFETCH_ISSUED": 105,
+                     "VICTIM_HIT": 0, "MISS_CACHE_HIT": 0, "TOTAL": 96},
+    },
+    ("cache_thrash", "victim", (("victim_entries", 32),)): {
+        "thrash_a": {"MISS": 32, "VICTIM_HIT": 64, "PREFETCH_HIT": 0,
+                     "PREFETCH_ISSUED": 0, "TOTAL": 96},
+        "thrash_b": {"MISS": 32, "VICTIM_HIT": 64, "PREFETCH_HIT": 0,
+                     "PREFETCH_ISSUED": 0, "TOTAL": 96},
+    },
+    ("mixed_stream", "stream_buffer", ()): {
+        "": {"HIT": 701, "MSHR_HIT": 3, "MISS": 2, "PREFETCH_HIT": 254,
+             "PREFETCH_ISSUED": 262, "TOTAL": 960},
+        "stream_1": {"HIT": 254, "MSHR_HIT": 2, "MISS": 1, "PREFETCH_HIT": 127,
+                     "PREFETCH_ISSUED": 131, "TOTAL": 384},
+        "stream_2": {"HIT": 254, "MSHR_HIT": 2, "MISS": 1, "PREFETCH_HIT": 127,
+                     "PREFETCH_ISSUED": 131, "TOTAL": 384},
+        "stream_3": {"HIT": 254, "MSHR_HIT": 2, "MISS": 1, "PREFETCH_HIT": 127,
+                     "PREFETCH_ISSUED": 131, "TOTAL": 384},
+    },
+}
+
+
+def cfg_for(mechanism, overrides=()):
+    return SimConfig(miss_mechanism=mechanism, **dict(overrides))
+
+
+def run_engines(name, cfg, params=None):
+    """Run a scenario under ``cfg`` on every engine in ENGINES; assert the
+    signatures are identical and return the first result."""
+    inst = build(name, **(params or {}))
+    results = {e: inst.run(engine=e, config=cfg) for e in ENGINES}
+    sigs = {e: r.signature() for e, r in results.items()}
+    first = ENGINES[0]
+    for e in ENGINES[1:]:
+        assert sigs[e] == sigs[first], (
+            f"{name} x {cfg.miss_mechanism}: engine {e!r} diverges from {first!r}"
+        )
+    return inst, results[first]
+
+
+# --------------------------------------------------------------------- identity
+class TestTriEngineIdentity:
+    @pytest.mark.parametrize("mechanism", MECHANISMS)
+    @pytest.mark.parametrize("name", sorted(list_scenarios()))
+    def test_registry_identity(self, name, mechanism):
+        inst, res = run_engines(name, cfg_for(mechanism))
+        # demand-access conservation: mechanisms reclassify misses, they
+        # never create or destroy demand accesses
+        base = inst.run(engine=ENGINES[0], config=SimConfig())
+        for sid in res.stats.streams():
+            got = inst.frame(res).filter(stream=sid).outcome_counts()
+            want = inst.frame(base).filter(stream=sid).outcome_counts()
+            assert got["TOTAL"] == want["TOTAL"], (name, mechanism, sid)
+        # the oracle (when a mechanism adjuster makes an analytic claim)
+        check = inst.check_oracle(res, config=cfg_for(mechanism))
+        if check is not None:
+            assert check["ok"], (name, mechanism, check["mismatches"])
+
+
+# ----------------------------------------------------------------- none-identity
+class TestNoneBitIdentity:
+    @pytest.mark.parametrize("name", sorted(list_scenarios()))
+    def test_golden_cycles_and_zero_lanes(self, name):
+        inst = build(name)
+        res = inst.run(engine=ENGINES[0], config=SimConfig())
+        assert res.cycles == GOLDEN_CYCLES_NONE[name]
+        counts = inst.frame(res).outcome_counts()
+        for lane in MECH_LANES:
+            assert counts[lane] == 0, (name, lane, counts[lane])
+
+    def test_geometry_inert_while_none(self):
+        """Mechanism geometry fields are structural (compiled recompiles)
+        but must not perturb results while miss_mechanism='none'."""
+        base = build("cache_thrash").run(engine=ENGINES[0], config=SimConfig())
+        tweaked = build("cache_thrash").run(
+            engine=ENGINES[0],
+            config=SimConfig(victim_entries=3, miss_cache_entries=5,
+                             stream_buffers=2, stream_buffer_depth=7),
+        )
+        assert tweaked.signature() == base.signature()
+
+
+# ---------------------------------------------------------------------- goldens
+class TestMechanismGoldens:
+    @pytest.mark.parametrize("key", sorted(GOLDEN_MECH_CYCLES, key=repr))
+    def test_golden_cycles(self, key):
+        name, mechanism, overrides = key
+        if mechanism not in MECHANISMS:
+            pytest.skip(f"{mechanism} not in MECHANISMS axis")
+        _, res = run_engines(name, cfg_for(mechanism, overrides))
+        assert res.cycles == GOLDEN_MECH_CYCLES[key], key
+
+    @pytest.mark.parametrize("key", sorted(GOLDEN_MECH_SPLITS, key=repr))
+    def test_golden_splits(self, key):
+        name, mechanism, overrides = key
+        if mechanism not in MECHANISMS:
+            pytest.skip(f"{mechanism} not in MECHANISMS axis")
+        inst, res = run_engines(name, cfg_for(mechanism, overrides))
+        frame = inst.frame(res)
+        for sname, exp in GOLDEN_MECH_SPLITS[key].items():
+            got = frame.filter(stream=sname).outcome_counts()
+            for k, want in exp.items():
+                assert got[k] == want, (key, sname, k, got)
+
+
+# --------------------------------------------------------------- geometry draws
+def geometry_draw(rng: random.Random) -> dict:
+    return {
+        "miss_mechanism": rng.choice([m for m in MISS_MECHANISMS if m != "none"]),
+        "victim_entries": rng.randint(1, 48),
+        "miss_cache_entries": rng.randint(1, 48),
+        "stream_buffers": rng.randint(1, 6),
+        "stream_buffer_depth": rng.randint(1, 6),
+    }
+
+
+class TestGeometrySeeded:
+    """Seeded geometry sweep — always runs, so the CI matrix exercises
+    mechanism geometry even without hypothesis installed."""
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_cache_thrash_geometry(self, seed):
+        geom = geometry_draw(random.Random(seed))
+        # small thrash shape keeps each tri-engine run cheap
+        run_engines("cache_thrash", SimConfig(**geom),
+                    params={"arr_lines": 16, "passes": 2})
+
+    @pytest.mark.parametrize("seed", range(100, 104))
+    def test_producer_consumer_geometry(self, seed):
+        geom = geometry_draw(random.Random(seed))
+        run_engines("producer_consumer", SimConfig(**geom))
+
+
+if HAVE_HYPOTHESIS:
+
+    GEOMETRY = st.fixed_dictionaries(
+        {
+            "miss_mechanism": st.sampled_from(
+                [m for m in MISS_MECHANISMS if m != "none"]
+            ),
+            "victim_entries": st.integers(min_value=1, max_value=48),
+            "miss_cache_entries": st.integers(min_value=1, max_value=48),
+            "stream_buffers": st.integers(min_value=1, max_value=6),
+            "stream_buffer_depth": st.integers(min_value=1, max_value=6),
+        }
+    )
+
+    @settings(max_examples=12, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(geom=GEOMETRY)
+    def test_geometry_hypothesis(geom):
+        run_engines("cache_thrash", SimConfig(**geom),
+                    params={"arr_lines": 16, "passes": 2})
+
+
+# ------------------------------------------------------------ compiled trace key
+@pytest.mark.skipif("compiled" not in ENGINES, reason="compiled engine excluded")
+class TestCompiledInvalidation:
+    def _run(self, cfg):
+        return build("l2_lat").run(engine="compiled", config=cfg)
+
+    def test_mechanism_change_recompiles_value_change_replays(self):
+        TRACE_CACHE.clear()
+        self._run(SimConfig(miss_mechanism="victim"))
+        assert TRACE_CACHE.compiles == 1
+
+        # value-only change: same structural key, trace replays
+        self._run(SimConfig(miss_mechanism="victim", max_cycles=1 << 21))
+        assert TRACE_CACHE.compiles == 1
+        assert TRACE_CACHE.hits >= 1
+
+        # mechanism change: structural key moves, fresh compile
+        self._run(SimConfig(miss_mechanism="miss_cache"))
+        assert TRACE_CACHE.compiles == 2
+
+        # geometry change within one mechanism is structural too
+        self._run(SimConfig(miss_mechanism="victim", victim_entries=16))
+        assert TRACE_CACHE.compiles == 3
+
+        # back to the first config: replay, not recompile
+        self._run(SimConfig(miss_mechanism="victim"))
+        assert TRACE_CACHE.compiles == 3
+
+    def test_structural_key_carries_mechanism_fields(self):
+        a = SimConfig(miss_mechanism="victim").structural_key()
+        b = SimConfig(miss_mechanism="miss_cache").structural_key()
+        c = SimConfig(miss_mechanism="victim", victim_entries=9).structural_key()
+        d = SimConfig(miss_mechanism="victim", max_cycles=123456).structural_key()
+        assert a != b and a != c
+        assert a == d  # max_cycles is VALUE_ONLY_CONFIG
+
+
+# ----------------------------------------------------------------------- guards
+class TestMechanismGuards:
+    def test_unknown_mechanism_rejected(self):
+        with pytest.raises(ValueError, match="miss_mechanism"):
+            VMEMCache(4096, 128, Bandwidth(64.0), miss_mechanism="victim_cache")
+
+    def test_registry_constant_matches_config_domain(self):
+        assert MISS_MECHANISMS == (
+            "none", "victim", "miss_cache", "stream_buffer", "victim+stream"
+        )

@@ -232,6 +232,67 @@ def test_oracle_holds_off_default(name, params, engine):
             assert got[key] == want, f"{name}{params}[{engine}] {sname}: {key}"
 
 
+# --------------------------------------------------------------------------- mechanisms
+#: Mechanism-oracle wiring (ISSUE 6 satellite): the analytic adjusters
+#: registered via ``register_mech_oracle`` must hold on live runs.  Geometry
+#: overrides pick out each analytic regime of the cache_thrash oracle
+#: (victim full-reuse, victim overrun, miss-cache retention thresholds,
+#: stream-buffer coverage vs ping-pong); the full mechanism x scenario x
+#: engine surface lives in tests/test_mechanisms.py.
+MECH_ORACLE_CASES = [
+    ("cache_thrash", "victim", {}),                            # overrun: 8 << 32
+    ("cache_thrash", "victim", {"victim_entries": 32}),        # full reuse
+    ("cache_thrash", "victim", {"victim_entries": 64}),
+    ("cache_thrash", "miss_cache", {}),                        # 8 << 64 miss stream
+    ("cache_thrash", "miss_cache", {"miss_cache_entries": 64}),
+    ("cache_thrash", "stream_buffer", {}),                     # coverage
+    ("cache_thrash", "stream_buffer", {"stream_buffers": 1}),  # ping-pong
+    ("cache_thrash", "victim+stream", {"victim_entries": 4}),
+    ("producer_consumer", "victim", {}),
+    ("producer_consumer", "miss_cache", {}),
+    ("producer_consumer", "stream_buffer", {}),
+    ("producer_consumer", "victim+stream", {}),
+    ("straggler", "victim", {}),
+    ("straggler", "miss_cache", {}),
+    ("straggler", "stream_buffer", {}),
+    ("straggler", "victim+stream", {}),
+]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize(
+    "name,mechanism,overrides",
+    MECH_ORACLE_CASES,
+    ids=lambda v: v if isinstance(v, str)
+    else ",".join(f"{k}={x}" for k, x in v.items()) or "default",
+)
+def test_mechanism_oracle_holds(name, mechanism, overrides, engine):
+    from repro.sim.executor import SimConfig
+
+    cfg = SimConfig(miss_mechanism=mechanism, **overrides)
+    inst = build(name)
+    expected = inst.expected_for(cfg)
+    assert expected is not None, (
+        f"{name} x {mechanism}{overrides}: adjuster declined a claim for a "
+        "case this table expects to be analytic"
+    )
+    check = inst.check_oracle(inst.run(engine=engine, config=cfg), config=cfg)
+    assert check is not None and check["ok"], check
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_mechanism_oracle_declines_out_of_regime(engine):
+    """victim+stream with a large victim cache has interacting structures —
+    the adjuster must return None (no analytic claim), and check_oracle
+    must pass that through rather than fabricate a table."""
+    from repro.sim.executor import SimConfig
+
+    cfg = SimConfig(miss_mechanism="victim+stream", victim_entries=64)
+    inst = build("cache_thrash")
+    assert inst.expected_for(cfg) is None
+    assert inst.check_oracle(inst.run(engine=engine, config=cfg), config=cfg) is None
+
+
 # --------------------------------------------------------------------------- scheduling
 class TestPriorityScheduling:
     def test_priority_wins_contended_launch_slot(self):
