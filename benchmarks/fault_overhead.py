@@ -1,0 +1,241 @@
+"""Fault-injection subsystem overhead gate + chaos smoke (§5.11 receipts).
+
+The fault subsystem promises to be free when unused and cheap when armed:
+
+* **fault-plan-off** — ``fault_plan=None`` and an empty :class:`FaultPlan`
+  must be *bit-identical* (full ``SimResult.signature()`` equality on both
+  engine loops): the subsystem is invisible when off.
+* **armed-but-idle** — a plan whose specs never fire (scheduled far past the
+  end of the run) keeps the fault machinery live on every cycle — the
+  pending-heap horizon check in both engine loops and the fast-forward
+  window caps.  This benchmark times that worst-case bookkeeping against the
+  plan-off baseline and gates it at ≤ 5% overhead per engine
+  (``overhead = t_armed / t_off - 1``), the same bar the StatsFrame report
+  path meets.  Cycle counts and per-stream demand counters must not move.
+
+Writes ``BENCH_faults.json`` (``speedup`` = off / armed ≥ 0.95 ⇔ the gate)
+— tracked by ``benchmarks/regress.py`` like every other trajectory.
+
+``--smoke {none,kernel_abort,worker_crash}`` runs the chaos-smoke tier used
+by CI's matrix job instead: a fast end-to-end probe of one fault family
+(fault-off goldens / kernel aborts with conservation across all three
+engines / pooled worker crashes with journal resume).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from repro.core.faults import FaultPlan, KernelFaultSpec, check_sim_conservation
+from repro.sim.batch import BatchRunner, sweep_jobs
+from repro.sim.executor import SimConfig
+from repro.sim.scenarios import build
+
+from .common import csv_line
+
+MAX_OVERHEAD = 0.05
+SCENARIO = "cache_thrash"  # longest default-parameter workload (9602 cycles)
+TIMING_SAMPLES = 7   # paired (off, armed) run samples per measurement
+MEASUREMENTS = 3     # independent measurements; the median ratio gates
+
+#: golden cycle counts fault-plan-off must reproduce (test_scenarios excerpt)
+FAULT_OFF_GOLDENS = {"cache_thrash": 9602, "mixed_stream": 240, "straggler": 512}
+
+
+def _cfg(plan=None) -> SimConfig:
+    cfg = SimConfig()
+    cfg.fault_plan = plan
+    return cfg
+
+
+def _idle_plan() -> FaultPlan:
+    """Armed on every run, fires never: the abort arms at stream 1's first
+    launch with a horizon far past the end of the run, and the HBM stall
+    sits in the pending heap the whole time — worst-case bookkeeping, zero
+    behavioral effect (both resolve RECOVERED at end-of-sim)."""
+    return FaultPlan(kernel_faults=(
+        KernelFaultSpec("abort", stream=1, kernel=0, after=10**8),
+        KernelFaultSpec("hbm_stall", stream=1, after=10**8, duration=10),
+    ))
+
+
+def _run(engine: str, plan=None):
+    return build(SCENARIO).run(engine=engine, config=_cfg(plan))
+
+
+def _time_engine(engine: str):
+    """Median-of-measurements paired ratio, min-of-samples per side (stalls
+    only inflate samples; the minima are the clean timings)."""
+    perf = time.perf_counter
+    plan = _idle_plan()
+    _run(engine), _run(engine, plan)  # warm both paths
+    ratios, off_best, armed_best = [], float("inf"), float("inf")
+    for _ in range(MEASUREMENTS):
+        ob, ab = float("inf"), float("inf")
+        for _ in range(TIMING_SAMPLES):
+            t0 = perf()
+            _run(engine)
+            t1 = perf()
+            _run(engine, plan)
+            ob = min(ob, t1 - t0)
+            ab = min(ab, perf() - t1)
+        ratios.append(ab / ob)
+        off_best, armed_best = min(off_best, ob), min(armed_best, ab)
+    ratios.sort()
+    return ratios[len(ratios) // 2], off_best, armed_best
+
+
+def run(verbose: bool = True) -> Dict[str, object]:
+    # identity: plan-off is bit-identical to an empty plan on both engines
+    identical = all(
+        _run(e).signature() == _run(e, FaultPlan()).signature()
+        for e in ("cycle", "event")
+    )
+
+    # an armed-but-idle plan must not move cycles or demand counters
+    plan = _idle_plan()
+    inert = True
+    for e in ("cycle", "event"):
+        off, armed = _run(e), _run(e, plan)
+        inert &= off.cycles == armed.cycles
+        for sid in off.frame.streams():
+            a = off.frame.filter(stream=sid).outcome_counts()
+            b = armed.frame.filter(stream=sid).outcome_counts()
+            inert &= a["TOTAL"] == b["TOTAL"] and a["MISS"] == b["MISS"]
+        inert &= check_sim_conservation(armed, plan)["ok"]
+
+    per_engine: Dict[str, Dict[str, float]] = {}
+    worst = 0.0
+    for e in ("cycle", "event"):
+        ratio, t_off, t_armed = _time_engine(e)
+        overhead = ratio - 1.0
+        worst = max(worst, overhead)
+        per_engine[e] = {
+            "off_s": round(t_off, 5),
+            "armed_s": round(t_armed, 5),
+            "overhead": round(overhead, 4),
+        }
+
+    ok = identical and inert and worst <= MAX_OVERHEAD
+    speedup = 1.0 / (1.0 + worst)
+    if verbose:
+        print(f"  {SCENARIO}, armed-but-idle plan vs fault_plan=None")
+        for e, row in per_engine.items():
+            print(f"  {e:>6} engine: off {row['off_s']*1e3:7.2f} ms, "
+                  f"armed {row['armed_s']*1e3:7.2f} ms, "
+                  f"overhead {row['overhead']:+.1%}")
+        print(f"  fault-off bit-identical to empty plan: {identical}")
+        print(f"  armed-idle plan behaviorally inert   : {inert}")
+        print(f"  acceptance (identical, inert, overhead <= {MAX_OVERHEAD:.0%}): {ok}")
+
+    csv_line(
+        "fault_overhead",
+        per_engine["event"]["armed_s"] * 1e6,
+        f"worst_overhead={worst:+.1%} identical={identical} ok={ok}",
+    )
+    return {
+        "ok": ok,
+        "mode": "full",
+        "identical": identical,
+        "inert": inert,
+        "scenario": SCENARIO,
+        "per_engine": per_engine,
+        "worst_overhead": round(worst, 4),
+        "max_overhead": MAX_OVERHEAD,
+        "speedup": round(speedup, 3),
+    }
+
+
+# ------------------------------------------------------------------ chaos smoke
+def smoke(fault: str) -> bool:
+    """One chaos-smoke probe (CI matrix: event x {none, kernel_abort,
+    worker_crash}).  Returns True on pass; prints what it checked."""
+    if fault == "none":
+        ok = True
+        for scn, want in sorted(FAULT_OFF_GOLDENS.items()):
+            res = build(scn).run(engine="event", config=_cfg())
+            empty = build(scn).run(engine="event", config=_cfg(FaultPlan()))
+            good = res.cycles == want and res.signature() == empty.signature()
+            print(f"  {scn}: cycles {res.cycles} (golden {want}), "
+                  f"empty-plan identical: {res.signature() == empty.signature()}")
+            ok &= good
+        return ok
+
+    if fault == "kernel_abort":
+        plan = FaultPlan(kernel_faults=(
+            KernelFaultSpec("abort", stream=1, kernel=0, after=40),
+            KernelFaultSpec("abort", stream=2, kernel=1, after=15),
+        ))
+        sigs = {e: build("mixed_stream").run(engine=e, config=_cfg(plan))
+                for e in ("cycle", "event", "compiled")}
+        identical = (sigs["cycle"].signature() == sigs["event"].signature()
+                     == sigs["compiled"].signature())
+        check = check_sim_conservation(sigs["event"], plan)
+        lanes = sigs["event"].frame.outcome_counts()
+        print(f"  tri-engine identical: {identical}; conservation: {check['ok']}; "
+              f"KERNEL_ABORT={lanes['KERNEL_ABORT']} RECOVERED={lanes['RECOVERED']}")
+        return identical and check["ok"] and lanes["KERNEL_ABORT"] >= 1
+
+    if fault == "worker_crash":
+        import pickle
+        import tempfile
+
+        plan = FaultPlan(seed=2, crash_jobs=(0,), hang_jobs=(2,),
+                         fail_attempts=1, pool_max_retries=2, job_timeout_s=5.0)
+        jobs = sweep_jobs(scenarios=["l2_lat", "cache_thrash", "mixed_stream"],
+                          engines=("event",))
+        with tempfile.TemporaryDirectory() as td:
+            journal = f"{td}/chaos.journal"
+            par = BatchRunner(jobs, workers=2, fault_plan=plan,
+                              journal=journal).run(parallel=True)
+            ser = BatchRunner(jobs, workers=2, fault_plan=plan).run(parallel=False)
+            raw = open(journal, "rb").read()
+            with open(journal, "rb") as fh:
+                pickle.load(fh), pickle.load(fh)
+                cut = fh.tell()
+            with open(journal, "wb") as fh:
+                fh.write(raw[:cut])  # killed mid-sweep
+            resumed = BatchRunner(jobs, workers=2, fault_plan=plan,
+                                  journal=journal).run(parallel=True)
+        identical = par.signature() == ser.signature() == resumed.signature()
+        print(f"  pooled == serial == journal-resumed: {identical}; "
+              f"failures: {par.failures()}; "
+              f"attempts: {[p['attempts'] for p in par.payloads]}")
+        return identical and not par.failures()
+
+    raise SystemExit(f"unknown --smoke fault {fault!r}")
+
+
+def main() -> int:
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out",
+        default=os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                             "BENCH_faults.json"),
+        help="where to write the JSON trajectory (default: repo root)",
+    )
+    ap.add_argument("--smoke", choices=["none", "kernel_abort", "worker_crash"],
+                    help="run one chaos-smoke probe instead of the gate")
+    args = ap.parse_args()
+    if args.smoke:
+        ok = smoke(args.smoke)
+        print(f"chaos smoke [{args.smoke}]: {'PASS' if ok else 'FAIL'}")
+        return 0 if ok else 1
+    payload = run()
+    payload["benchmark"] = "fault_overhead"
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0 if payload["ok"] else 1
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -71,6 +71,11 @@ SWEEP = [
                                  kb_per_kernel=512)),
     ("copy_compute_overlap", dict(chunks=12, chunk_kb=512)),
     ("fork_join", dict(rounds=6, width=4, work_kb=512)),
+    # lines <= max_synth_beats keeps the abort oracle exact (see
+    # benchmarks/sim_compiled.py)
+    ("fault_kernel_abort", dict(streams=3, lines=2048, abort_after=200)),
+    ("fault_straggler", dict(long_lines=65536, short_kernels=12,
+                             short_lines=128, hbm_stall_at=64)),
 ]
 QUICK_SWEEP = [
     ("l2_lat", dict(n_loads=1024, n_streams=4)),

@@ -27,6 +27,7 @@ def main() -> None:
     # fig5's compiled-HLO tier) loads jax and its thread pools.
     from . import (
         batch_speed,
+        fault_overhead,
         fig2_l2lat,
         fig34_mixed,
         mechanism_sweep,
@@ -72,6 +73,8 @@ def main() -> None:
     section("batch_speed", batch_speed.run(quick=True))
     print("\n=== Miss-path mechanisms: vector sweep vs serial, per mechanism ===")
     section("mechanism", mechanism_sweep.run(quick=True))
+    print("\n=== Fault injection: armed-but-idle overhead + off-path identity ===")
+    section("faults", fault_overhead.run())
     print("\n=== Fig 2: l2_lat 4-stream (tip / clean / serialized) ===")
     results.append(("fig2", fig2_l2lat.run()["ok"]))
     print("\n=== Fig 3: mixed kernels, 1 side stream ===")

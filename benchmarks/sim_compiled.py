@@ -65,6 +65,12 @@ SWEEP = [
                                  kb_per_kernel=1024)),
     ("copy_compute_overlap", dict(chunks=24, chunk_kb=1024)),
     ("fork_join", dict(rounds=12, width=4, work_kb=1024)),
+    # lines <= max_synth_beats (4096) keeps the abort oracle exact: above
+    # it, synthesized beats coalesce and the per-cycle line rate exceeds
+    # issue_width, so the analytic issued-before-abort count no longer holds
+    ("fault_kernel_abort", dict(streams=4, lines=4096, abort_after=300)),
+    ("fault_straggler", dict(long_lines=131072, short_kernels=24,
+                             short_lines=256, hbm_stall_at=64)),
 ]
 QUICK_SWEEP = [
     ("l2_lat", dict(n_loads=1024, n_streams=4)),

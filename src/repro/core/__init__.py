@@ -13,6 +13,8 @@ Public API:
         Stream, StreamManager,
         StreamStats, StepCost, stream_scope, current_stream,
         StatCollector,
+        FaultPlan, KernelFaultSpec,       # deterministic fault injection (core/faults.py)
+        check_sim_conservation,
     )
 
 See docs/DESIGN.md for the architecture and the paper-section cross-reference.
@@ -43,6 +45,13 @@ from .sinks import (
     merged_report,
     render_text,
     stream_report,
+)
+from .faults import (
+    FAULT_KINDS,
+    FAULT_LANES,
+    FaultPlan,
+    KernelFaultSpec,
+    check_sim_conservation,
 )
 from .timeline import KernelTime, KernelTimeline
 from .stream import Stream, StreamEvent, StreamManager, WorkItem
@@ -76,6 +85,11 @@ __all__ = [
     "frame_block",
     "merged_report",
     "ALL_STREAMS",
+    "FAULT_KINDS",
+    "FAULT_LANES",
+    "FaultPlan",
+    "KernelFaultSpec",
+    "check_sim_conservation",
     "KernelTime",
     "KernelTimeline",
     "Stream",

@@ -594,15 +594,19 @@ class StatsFrame:
     def outcome_counts(self) -> Dict[str, int]:
         """The scenario-oracle key convention in one call:
         ``{"HIT", "MSHR_HIT", "MISS", "RES_FAIL", "VICTIM_HIT",
-        "MISS_CACHE_HIT", "PREFETCH_HIT", "PREFETCH_ISSUED", "TOTAL"}``
+        "MISS_CACHE_HIT", "PREFETCH_HIT", "PREFETCH_ISSUED", "KERNEL_ABORT",
+        "RETRY", "TIMEOUT_EXPIRED", "SHED", "RECOVERED", "TOTAL"}``
         summed over the selected streams/types.  ``TOTAL`` counts each
         successful demand access once — HIT + MSHR_HIT + MISS plus the three
         miss-path mechanism hit lanes — so it is mechanism-invariant;
         failures retry, so they are excluded (see ``repro.sim.scenarios``).
         ``PREFETCH_ISSUED`` sums the :data:`AccessType.PREFETCH` traffic
-        row, which is excluded from every demand key.  Only meaningful on an
-        access-outcome axis: fail views (whose columns are ``FailOutcome``
-        reasons) are rejected."""
+        row, which is excluded from every demand key; the fault-injection
+        bookkeeping row (:data:`AccessType.FAULT`, docs/DESIGN.md §5.11) is
+        likewise excluded — its five lanes surface under their own keys and
+        never perturb ``TOTAL``.  Only meaningful on an access-outcome axis:
+        fail views (whose columns are ``FailOutcome`` reasons) are
+        rejected."""
         if self._view in ("fail", "clean_fail"):
             raise QueryError(
                 f"outcome_counts() reads AccessOutcome columns; view {self._view!r} "
@@ -624,6 +628,9 @@ class StatsFrame:
             demand[pf_row] = False
         else:
             pf_issued = 0
+        fault_row = int(AccessType.FAULT)
+        if fault_row < m.shape[0]:
+            demand[fault_row] = False
         got = {
             "HIT": int(col(AccessOutcome.HIT)[demand].sum()),
             "MSHR_HIT": int(col(AccessOutcome.HIT_RESERVED)[demand].sum()),
@@ -633,6 +640,14 @@ class StatsFrame:
             "MISS_CACHE_HIT": int(col(AccessOutcome.MISS_CACHE_HIT)[demand].sum()),
             "PREFETCH_HIT": int(col(AccessOutcome.PREFETCH_HIT)[demand].sum()),
             "PREFETCH_ISSUED": pf_issued,
+            # fault lanes (KERNEL_ABORT..RECOVERED live on the FAULT row, but
+            # serve/pool layers may attribute them on other rows too — sum
+            # the whole column; demand rows never record these outcomes)
+            "KERNEL_ABORT": int(col(AccessOutcome.KERNEL_ABORT).sum()),
+            "RETRY": int(col(AccessOutcome.RETRY).sum()),
+            "TIMEOUT_EXPIRED": int(col(AccessOutcome.TIMEOUT_EXPIRED).sum()),
+            "SHED": int(col(AccessOutcome.SHED).sum()),
+            "RECOVERED": int(col(AccessOutcome.RECOVERED).sum()),
         }
         got["TOTAL"] = (
             got["HIT"] + got["MSHR_HIT"] + got["MISS"]

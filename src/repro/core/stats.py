@@ -79,6 +79,11 @@ class AccessType(enum.IntEnum):
     #: attributed to the stream whose demand miss triggered the prefetch —
     #: this row is *traffic*, not demand, so demand-side views exclude it
     PREFETCH = 8
+    #: fault-injection bookkeeping (``FaultPlan``, see docs/DESIGN.md §5.11):
+    #: every injected fault and recovery action lands on this row, in one of
+    #: the fault outcome columns below — like PREFETCH, this row is not
+    #: demand traffic and demand-side views exclude it
+    FAULT = 9
 
     @classmethod
     def count(cls) -> int:
@@ -106,6 +111,26 @@ class AccessOutcome(enum.IntEnum):
     VICTIM_HIT      — found in the victim cache (recently evicted line)
     MISS_CACHE_HIT  — found in the miss cache (recently missed line)
     PREFETCH_HIT    — matched the head of a stream buffer (prefetched line)
+
+    Fault-attribution outcomes (``repro.core.faults.FaultPlan``, see
+    docs/DESIGN.md §5.11) — recorded on the :data:`AccessType.FAULT` row,
+    one event per fault/recovery action, attributed to the faulted stream.
+    The conservation oracle relies on each injected fault resolving in
+    exactly one of these lanes:
+
+    KERNEL_ABORT    — a kernel was killed mid-run (its remaining work
+                      discarded; the kernel still retires and is timed)
+    RETRY           — one retry attempt (a shed request re-enqueued after
+                      backoff; a pool job re-executed after a worker fault)
+    TIMEOUT_EXPIRED — a deadline/timeout fired (serve request past its
+                      deadline; pool job past its per-job timeout)
+    SHED            — load shed: admission-overflow eviction or client
+                      cancellation (serve), or a pool job dropped after its
+                      retry budget
+    RECOVERED       — a faulted entity completed anyway (slowdown window
+                      ended / stall burst drained / abort armed after the
+                      kernel already finished; retried request or pool job
+                      that ultimately succeeded)
     """
 
     HIT = 0
@@ -116,6 +141,11 @@ class AccessOutcome(enum.IntEnum):
     VICTIM_HIT = 5
     MISS_CACHE_HIT = 6
     PREFETCH_HIT = 7
+    KERNEL_ABORT = 8
+    RETRY = 9
+    TIMEOUT_EXPIRED = 10
+    SHED = 11
+    RECOVERED = 12
 
     @classmethod
     def count(cls) -> int:
@@ -132,6 +162,11 @@ _OUTCOME_NAMES = {
     AccessOutcome.VICTIM_HIT: "VICTIM_HIT",
     AccessOutcome.MISS_CACHE_HIT: "MISS_CACHE_HIT",
     AccessOutcome.PREFETCH_HIT: "PREFETCH_HIT",
+    AccessOutcome.KERNEL_ABORT: "KERNEL_ABORT",
+    AccessOutcome.RETRY: "RETRY",
+    AccessOutcome.TIMEOUT_EXPIRED: "TIMEOUT_EXPIRED",
+    AccessOutcome.SHED: "SHED",
+    AccessOutcome.RECOVERED: "RECOVERED",
 }
 
 

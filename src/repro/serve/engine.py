@@ -27,11 +27,14 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+import heapq
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.faults import FAULT_LANES, FaultPlan
 from repro.core import (
     AccessOutcome,
     AccessType,
@@ -55,6 +58,12 @@ class Request:
     max_new_tokens: int = 16
     eos_id: int = -1  # -1 → run to max_new_tokens
     name: str = ""
+    #: admission priority under load shedding (higher = keep longer); ties
+    #: shed the latest-submitted first (docs/DESIGN.md §5.11)
+    priority: int = 0
+    #: per-request deadline in engine steps from submission (0 = use the
+    #: fault plan's ``deadline_steps`` default; both 0 = no deadline)
+    deadline_steps: int = 0
     # filled by the engine
     stream_id: int = -1
     generated: List[int] = field(default_factory=list)
@@ -62,6 +71,13 @@ class Request:
     decode_s: float = 0.0
     submitted_s: float = 0.0
     done: bool = False
+    #: retry attempts consumed (shed → backoff → re-enqueue cycles)
+    retries: int = 0
+    #: terminal disposition: "done", "timeout", "shed", or "cancelled"
+    status: str = ""
+    _seq: int = field(default=-1, init=False, repr=False)
+    _submit_step: int = field(default=0, init=False, repr=False)
+    _faulted: bool = field(default=False, init=False, repr=False)
 
 
 @dataclass(frozen=True)
@@ -73,6 +89,12 @@ class ServeConfig:
     greedy: bool = True
     temperature: float = 1.0
     sample_seed: int = 0
+    #: request-layer fault injection (docs/DESIGN.md §5.11): admission-queue
+    #: overflow → priority-based load shedding with bounded retry +
+    #: exponential backoff + seeded jitter, and per-request step deadlines.
+    #: ``None`` (or a plan with ``queue_limit=0`` and ``deadline_steps=0``)
+    #: disables every request-layer fault path.
+    fault_plan: Optional[FaultPlan] = None
 
 
 class Engine:
@@ -104,6 +126,11 @@ class Engine:
         self._rng = jax.random.PRNGKey(scfg.sample_seed)
         self._retired: List[Request] = []
         self._frame_cache: Optional[Tuple[int, StatsFrame]] = None
+        # request-layer fault injection (docs/DESIGN.md §5.11)
+        self._step_count = 0
+        self._seq = 0  # submission order; deterministic shed tie-break
+        #: shed requests awaiting re-enqueue: (eligible_step, seq, request)
+        self._backoff: List[Tuple[int, int, Request]] = []
 
     def _select_tokens(self, logits) -> np.ndarray:
         """Next-token selection for ``(B, V)`` logits — the one place both
@@ -128,11 +155,130 @@ class Engine:
 
     # ------------------------------------------------------------------ admission
     def submit(self, req: Request) -> int:
-        s = self.streams.create_stream(req.name or f"req_{len(self.queue)}")
+        s = self.streams.create_stream(req.name or f"req_{self._seq}")
         req.stream_id = s.stream_id
         req.submitted_s = time.perf_counter()
+        req._seq = self._seq
+        self._seq += 1
+        req._submit_step = self._step_count
         self.queue.append(req)
+        plan = self.scfg.fault_plan
+        if plan is not None:
+            # Admission control: over capacity, shed the lowest-priority
+            # entry (ties: latest submitted) — possibly the new arrival.
+            self._enforce_queue_limit(plan)
         return s.stream_id
+
+    def _shed(self, req: Request, plan: FaultPlan) -> None:
+        """One shed event (lane ``SHED``): into backoff while the retry
+        budget lasts, else terminal."""
+        self.table.inc_stats(AccessType.FAULT, AccessOutcome.SHED, req.stream_id, 1)
+        if req.retries < plan.max_retries:
+            req._faulted = True
+            eligible = self._step_count + plan.backoff_steps(req.retries, req.stream_id)
+            heapq.heappush(self._backoff, (eligible, req._seq, req))
+        else:
+            self._terminate(req, "shed", "request_shed")
+
+    def _terminate(self, req: Request, status: str, event: str) -> None:
+        """Queue-level terminal disposition (never held a slot at the end):
+        emit the stream's report through the normal sink path and retire."""
+        req.done = True
+        req.status = status
+        report = stream_report(
+            self.frame,
+            req.stream_id,
+            source="serve",
+            event=event,
+            cache_name="Serve_stats",
+            fields={
+                "name": req.name,
+                "tokens_out": len(req.generated),
+                "retries": req.retries,
+                "status": status,
+            },
+        )
+        req.exit_report = render_text(report)
+        self._retired.append(req)
+        for sink in self.sinks:
+            sink.emit(report)
+
+    def cancel(self, req: Request) -> bool:
+        """Client cancellation: removes ``req`` wherever it lives (queue,
+        backoff, or an active slot) and retires it with status
+        ``"cancelled"``.  Cancellation is load the engine dropped on request,
+        so it lands on the ``SHED`` lane (docs/DESIGN.md §5.11).  Returns
+        False when the request is not live in this engine."""
+        slot = next((i for i, r in enumerate(self.slots) if r is req), None)
+        if any(r is req for r in self.queue):
+            self.queue = [r for r in self.queue if r is not req]
+        elif any(entry[2] is req for entry in self._backoff):
+            self._backoff = [e for e in self._backoff if e[2] is not req]
+            heapq.heapify(self._backoff)
+        elif slot is not None:
+            self.slots[slot] = None
+        else:
+            return False
+        self.table.inc_stats(AccessType.FAULT, AccessOutcome.SHED, req.stream_id, 1)
+        self._terminate(req, "cancelled", "request_cancelled")
+        return True
+
+    def _enforce_queue_limit(self, plan: FaultPlan) -> None:
+        if plan.queue_limit <= 0:
+            return
+        # identity-based removal throughout: Request is a dataclass holding
+        # numpy prompts, so == would broadcast instead of comparing requests
+        while len(self.queue) > plan.queue_limit:
+            victim = min(self.queue, key=lambda r: (r.priority, -r._seq))
+            self.queue = [r for r in self.queue if r is not victim]
+            self._shed(victim, plan)
+
+    def _release_backoff(self, plan: FaultPlan) -> None:
+        """Re-enqueue shed requests whose backoff expired (lane ``RETRY``
+        per attempt), oldest eligibility first; the queue limit re-applies,
+        so a still-full queue sheds again (burning another retry)."""
+        released = False
+        while self._backoff and self._backoff[0][0] <= self._step_count:
+            _, _, req = heapq.heappop(self._backoff)
+            req.retries += 1
+            self.table.inc_stats(AccessType.FAULT, AccessOutcome.RETRY, req.stream_id, 1)
+            self.queue.append(req)
+            released = True
+        if released:
+            self._enforce_queue_limit(plan)
+
+    def _deadline_of(self, req: Request, plan: Optional[FaultPlan]) -> int:
+        if req.deadline_steps > 0:
+            return req.deadline_steps
+        return plan.deadline_steps if plan is not None else 0
+
+    def _expire_deadlines(self, plan: Optional[FaultPlan]) -> None:
+        """Retire every live request past its step deadline (lane
+        ``TIMEOUT_EXPIRED``, status ``"timeout"``) — queued, backing off, or
+        holding a slot; an expired slot frees for the next admit."""
+        def expired(req: Request) -> bool:
+            d = self._deadline_of(req, plan)
+            return d > 0 and self._step_count - req._submit_step >= d
+
+        victims: List[Request] = [r for r in self.queue if expired(r)]
+        for entry in list(self._backoff):
+            if expired(entry[2]):
+                victims.append(entry[2])
+        for i, req in enumerate(self.slots):
+            if req is not None and expired(req):
+                victims.append(req)
+                self.slots[i] = None
+        if not victims:
+            return
+        dead = {id(r) for r in victims}
+        self.queue = [r for r in self.queue if id(r) not in dead]
+        self._backoff = [e for e in self._backoff if id(e[2]) not in dead]
+        heapq.heapify(self._backoff)
+        for req in victims:
+            self.table.inc_stats(
+                AccessType.FAULT, AccessOutcome.TIMEOUT_EXPIRED, req.stream_id, 1
+            )
+            self._terminate(req, "timeout", "request_timeout")
 
     def _admit(self) -> None:
         for slot in range(self.scfg.n_slots):
@@ -168,6 +314,15 @@ class Engine:
 
     def step(self) -> int:
         """One engine iteration.  Returns #active slots advanced."""
+        self._step_count += 1
+        plan = self.scfg.fault_plan
+        if self._backoff and plan is not None:
+            self._release_backoff(plan)
+        if plan is not None or any(
+            r is not None and r.deadline_steps > 0
+            for r in (*self.queue, *self.slots)
+        ):
+            self._expire_deadlines(plan)
         self._admit()
         active = self._active()
         if not active:
@@ -207,6 +362,12 @@ class Engine:
     def _retire(self, slot: int) -> None:
         req = self.slots[slot]
         self.slots[slot] = None
+        req.status = "done"
+        if req._faulted:
+            # completed despite shedding/backoff: graceful degradation worked
+            self.table.inc_stats(
+                AccessType.FAULT, AccessOutcome.RECOVERED, req.stream_id, 1
+            )
         # paper §3.1: on exit, report only this stream's stats — a StatsFrame
         # selection through the same sink code path as the simulator's
         # kernel-exit and the trainer's summary.
@@ -221,6 +382,8 @@ class Engine:
                 "tokens_out": len(req.generated),
                 "prefill_s": req.prefill_s,
                 "decode_s": req.decode_s,
+                "retries": req.retries,
+                "status": req.status,
             },
         )
         req.exit_report = render_text(report)
@@ -237,18 +400,58 @@ class Engine:
         self._retired = []
         return out
 
-    def run_until_idle(self, max_steps: int = 10_000) -> List[Request]:
-        """Step until queue and slots drain; returns the requests retired
-        during this call (in retirement order) and forgets them, leaving any
-        earlier un-drained retirements for :meth:`drain_retired`."""
+    def run_until_idle(
+        self, max_steps: int = 10_000, deadline_s: Optional[float] = None
+    ) -> List[Request]:
+        """Step until queue, backoff, and slots drain; returns the requests
+        retired during this call (in retirement order) and forgets them,
+        leaving any earlier un-drained retirements for :meth:`drain_retired`.
+
+        ``max_steps`` and the optional ``deadline_s`` wall-clock budget are
+        livelock guards: a workload that cannot drain (e.g. an EOS-free
+        request whose ``max_new_tokens`` exceeds the step budget) raises
+        ``RuntimeError`` naming the stuck requests instead of spinning
+        forever (docs/DESIGN.md §5.11)."""
         mark = len(self._retired)
         steps = 0
-        while (self.queue or self._active()) and steps < max_steps:
+        t0 = time.perf_counter()
+        while self.queue or self._backoff or self._active():
+            if steps >= max_steps or (
+                deadline_s is not None and time.perf_counter() - t0 > deadline_s
+            ):
+                stuck = (
+                    [r.name or f"req_{r._seq}" for r in self.queue]
+                    + [e[2].name or f"req_{e[2]._seq}" for e in self._backoff]
+                    + [r.name or f"req_{r._seq}" for r in self.slots if r is not None]
+                )
+                raise RuntimeError(
+                    f"run_until_idle exceeded its budget after {steps} steps "
+                    f"({time.perf_counter() - t0:.1f}s) with "
+                    f"{len(stuck)} request(s) still live: {stuck}"
+                )
             self.step()
             steps += 1
         done = self._retired[mark:]
         del self._retired[mark:]
         return done
+
+    def fault_summary(self) -> Dict[str, object]:
+        """Snapshot of the fault subsystem: per-lane engine-wide counts,
+        terminal statuses of retired requests, and how many requests are
+        currently waiting out a backoff window."""
+        frame = self.frame.filter(access_type=AccessType.FAULT)
+        lanes = {
+            lane: int(frame.filter(outcome=getattr(AccessOutcome, lane)).sum())
+            for lane in FAULT_LANES
+        }
+        statuses: Dict[str, int] = {}
+        for req in self._retired:
+            statuses[req.status] = statuses.get(req.status, 0) + 1
+        return {
+            "lanes": lanes,
+            "statuses": statuses,
+            "pending_backoff": len(self._backoff),
+        }
 
     # ------------------------------------------------------------------ reports
     @property

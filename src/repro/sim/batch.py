@@ -41,23 +41,33 @@ produce bit-identical :meth:`BatchResult.signature` payloads — asserted by
 
 from __future__ import annotations
 
+import hashlib
 import multiprocessing as mp
+import pickle
 import time
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.collector import namespace_stream, split_namespaced
 from repro.core.engine import StatsEngine
+from repro.core.faults import FaultPlan
 from repro.core.sinks import ReportSink, merged_report
+from repro.core.stats import AccessOutcome, AccessType
 from .executor import SimConfig, VALUE_ONLY_CONFIG
 from .scenarios import ScenarioInstance, build, get_spec, list_scenarios
 
 __all__ = [
     "BatchJob", "BatchResult", "BatchRunner", "sweep_jobs", "run_job",
-    "run_vector_group", "same_shape_jobs",
+    "run_vector_group", "same_shape_jobs", "merge_payloads",
 ]
+
+#: ceiling on how long the parent waits for any one pooled result before it
+#: declares the worker hung and falls back to in-process retries — the
+#: pool path must never block forever on a dead worker, plan or no plan
+_DEFAULT_JOB_TIMEOUT_S = 300.0
 
 
 def _hashable(v: object) -> object:
@@ -149,6 +159,54 @@ def run_job(job: BatchJob) -> Dict[str, object]:
     return _payload(job, inst, res)
 
 
+def _failure_payload(job: BatchJob, error: BaseException, attempts: int) -> Dict[str, object]:
+    """Terminal worker-failure payload: same top-level shape as a success so
+    job-ordered reductions stay positional, but ``failed=True`` and no
+    signature — graceful degradation, not a poisoned sweep."""
+    return {
+        "scenario": job.scenario,
+        "params": job.kwargs(),
+        "engine": job.engine,
+        "config": {k: dict(v) if k == "stream_slowdown" else v for k, v in job.config},
+        "cycles": 0,
+        "stream_ids": {},
+        "oracle": None,
+        "signature": None,
+        "failed": True,
+        "error": f"{type(error).__name__}: {error}",
+        "attempts": attempts,
+    }
+
+
+def _inject_pool_fault(plan: Optional[FaultPlan], idx: int, attempt: int,
+                       pooled: bool) -> None:
+    """Apply the plan's deterministic worker fault for (job, attempt).
+
+    ``crash`` raises in place.  ``hang`` sleeps past the parent's result
+    timeout when pooled (the parent's ``imap`` timeout detects it); the
+    serial path cannot be watchdogged from within, so a hang degrades to an
+    immediate raise there — either way the attempt fails, keeping the
+    attempt sequence (and so every downstream count) pooled==serial."""
+    if plan is None:
+        return
+    kind = plan.pool_fault(idx, attempt)
+    if kind == "crash":
+        raise RuntimeError(f"injected worker crash (job={idx}, attempt={attempt})")
+    if kind == "hang":
+        if pooled:
+            time.sleep(plan.job_timeout_s * 10)
+        raise RuntimeError(f"injected worker hang (job={idx}, attempt={attempt})")
+
+
+def _pool_worker(args: Tuple[int, BatchJob, Optional[FaultPlan]]) -> Dict[str, object]:
+    """Pooled attempt 0 of one job; retries happen in the parent."""
+    idx, job, plan = args
+    _inject_pool_fault(plan, idx, 0, pooled=True)
+    payload = run_job(job)
+    payload["attempts"] = 1
+    return payload
+
+
 def run_vector_group(jobs: Sequence[BatchJob]) -> List[Dict[str, object]]:
     """Worker body for one same-shape group under ``backend="vector"``.
 
@@ -178,9 +236,36 @@ def merge_payloads(payloads: Sequence[Mapping[str, object]]) -> StatsEngine:
     :func:`repro.core.collector.split_namespaced`); cells land through
     ``record_batch`` with the per-window/clean lanes off, making the merge a
     commutative uint64 sum — independent of job completion order by
-    construction, and reduced in job order for byte determinism."""
+    construction, and reduced in job order for byte determinism.
+
+    Worker faults land on each job's FAULT row at stream 0 of its namespace
+    (scenario streams start at 1, so the row is otherwise unused): one RETRY
+    per re-execution, then RECOVERED when the job eventually produced a
+    payload or SHED when the batch dropped it — per job,
+    ``RETRY == attempts - 1`` and ``RECOVERED + SHED == (faults hit ? 1 :
+    0)``, the pool-layer conservation oracle (docs/DESIGN.md §5.11)."""
     merged = StatsEngine(name="Batch_merged_stats")
+
+    def lane(gid: int, outcome: AccessOutcome, n: int) -> None:
+        merged.record_batch(
+            np.full(1, int(AccessType.FAULT), np.int64),
+            np.full(1, int(outcome), np.int64),
+            np.full(1, gid, np.int64),
+            counts=np.full(1, n, np.uint64),
+            pw=False, clean=False,
+        )
+
     for idx, payload in enumerate(payloads):
+        attempts = int(payload.get("attempts", 1))
+        gid0 = namespace_stream(idx, 0)
+        if attempts > 1:
+            lane(gid0, AccessOutcome.RETRY, attempts - 1)
+            lane(gid0, AccessOutcome.SHED if payload.get("failed")
+                 else AccessOutcome.RECOVERED, 1)
+        elif payload.get("failed"):
+            lane(gid0, AccessOutcome.SHED, 1)
+        if payload.get("failed"):
+            continue
         streams = payload["signature"]["stats"]["streams"]
         for sid, views in sorted(streams.items(), key=lambda kv: int(kv[0])):
             gid = namespace_stream(idx, int(sid))
@@ -246,6 +331,16 @@ class BatchResult:
                             "mismatches": p["oracle"]["mismatches"]})
         return out
 
+    def failures(self) -> List[Dict[str, object]]:
+        """Jobs that exhausted their retry budget (``failed=True`` payloads),
+        in job order — a degraded sweep reports what it dropped."""
+        return [
+            {"job_index": i, "scenario": p["scenario"], "params": p["params"],
+             "engine": p["engine"], "error": p.get("error"),
+             "attempts": p.get("attempts", 1)}
+            for i, p in enumerate(self.payloads) if p.get("failed")
+        ]
+
     def stream_rows(self) -> Dict[Tuple[int, int], np.ndarray]:
         """(job index, original stream id) -> merged cumulative matrix."""
         out = {}
@@ -263,6 +358,9 @@ class BatchResult:
 
         names: Dict[str, int] = {}
         for idx, p in enumerate(self.payloads):
+            if p.get("failed"):
+                names[f"job{idx}/{p['scenario']}/failed"] = namespace_stream(idx, 0)
+                continue
             by_id = {sid: n for n, sid in p["stream_ids"].items()}
             for sid_str in p["signature"]["stats"]["streams"]:
                 sid = int(sid_str)
@@ -279,6 +377,11 @@ class BatchResult:
         from repro.core.stats import StatTable
 
         p = self.payloads[idx]
+        if p.get("failed"):
+            raise ValueError(
+                f"job {idx} ({p['scenario']}) failed after "
+                f"{p.get('attempts', 1)} attempt(s): {p.get('error')}"
+            )
         table = StatTable(name=f"job{idx}_{p['scenario']}")
         for sid_str, views in p["signature"]["stats"]["streams"].items():
             sid = int(sid_str)
@@ -300,6 +403,7 @@ class BatchResult:
                 "total_cycles": int(sum(p["cycles"] for p in self.payloads)),
                 "workers": self.workers,
                 "parallel": self.parallel,
+                "failed_jobs": sum(1 for p in self.payloads if p.get("failed")),
             },
         )
 
@@ -344,19 +448,114 @@ class BatchRunner:
 
     ``run(parallel=False)`` is the serial fallback: same worker bodies, same
     job order, same merge — proven bit-identical to the pooled path (and
-    across backends) via :meth:`BatchResult.signature` equality."""
+    across backends) via :meth:`BatchResult.signature` equality.
+
+    Robustness (docs/DESIGN.md §5.11): the pooled path consumes results via
+    ``imap`` with a per-result timeout, so a hung or crashed worker can
+    never hang the sweep — the pool is torn down and every unfinished job is
+    re-executed in-process with a bounded retry/backoff budget
+    (``fault_plan.pool_max_retries`` / ``pool_backoff_s``); jobs that
+    exhaust it degrade to ``failed=True`` payloads instead of poisoning the
+    run.  ``journal=<path>`` makes the sweep resumable: each payload is
+    appended (pickle) as it lands, and a rerun over the same job list skips
+    journaled work — a killed sweep resumes bit-identical.  A seeded
+    ``fault_plan`` with ``crash_jobs``/``hang_jobs`` injects deterministic
+    worker faults for testing; the schedule is a pure function of
+    (job index, attempt), so pooled and serial runs fail — and recover —
+    identically."""
 
     def __init__(self, jobs: Iterable[BatchJob], workers: Optional[int] = None,
-                 backend: str = "pool") -> None:
+                 backend: str = "pool", fault_plan: Optional[FaultPlan] = None,
+                 journal: Optional[str] = None) -> None:
         self.jobs = list(jobs)
         if not self.jobs:
             raise ValueError("BatchRunner needs at least one job")
         if backend not in ("pool", "vector"):
             raise ValueError(f"unknown backend {backend!r} (want 'pool' or 'vector')")
+        if backend == "vector" and (fault_plan is not None or journal is not None):
+            raise ValueError("fault_plan/journal require backend='pool'")
         self.backend = backend
+        self.fault_plan = fault_plan
+        self.journal = Path(journal) if journal is not None else None
         cpus = mp.cpu_count()
         self.workers = max(1, min(workers if workers is not None else cpus,
                                   len(self.jobs), cpus))
+
+    # ------------------------------------------------------------- journal
+    def _jobs_fingerprint(self) -> str:
+        # repr of frozen dataclasses over plain values — stable across
+        # processes (unlike salted str hashes)
+        return hashlib.sha256(repr(self.jobs).encode()).hexdigest()
+
+    def _load_journal(self) -> Dict[int, Dict[str, object]]:
+        """Completed payloads from a prior (possibly killed) run.  A journal
+        for a different job list is ignored wholesale; a truncated tail
+        record (the kill landed mid-append) is dropped silently."""
+        if self.journal is None or not self.journal.exists():
+            return {}
+        done: Dict[int, Dict[str, object]] = {}
+        with open(self.journal, "rb") as fh:
+            try:
+                header = pickle.load(fh)
+            except (EOFError, pickle.UnpicklingError):
+                return {}
+            if not isinstance(header, dict) or \
+                    header.get("fingerprint") != self._jobs_fingerprint():
+                return {}
+            while True:
+                try:
+                    rec = pickle.load(fh)
+                except (EOFError, pickle.UnpicklingError):
+                    break
+                idx = rec.get("idx")
+                if isinstance(idx, int) and 0 <= idx < len(self.jobs):
+                    done[idx] = rec["payload"]
+        return done
+
+    def _open_journal(self, resumed: bool):
+        if self.journal is None:
+            return None
+        if resumed:
+            return open(self.journal, "ab")
+        fh = open(self.journal, "wb")
+        pickle.dump({"fingerprint": self._jobs_fingerprint()}, fh)
+        fh.flush()
+        return fh
+
+    @staticmethod
+    def _journal_append(fh, idx: int, payload: Dict[str, object]) -> None:
+        if fh is None:
+            return
+        pickle.dump({"idx": idx, "payload": payload}, fh)
+        fh.flush()
+
+    # ------------------------------------------------------------- retries
+    def _run_one(self, idx: int, job: BatchJob,
+                 first_attempt: int) -> Dict[str, object]:
+        """In-process execution of one job with the plan's retry budget.
+        ``first_attempt`` > 0 means a pooled attempt already burned part of
+        the budget — the attempt sequence stays a pure function of the job
+        index, so pooled-then-serial and all-serial runs count identically."""
+        plan = self.fault_plan
+        max_retries = plan.pool_max_retries if plan is not None else 0
+        if first_attempt > max_retries:
+            return _failure_payload(
+                job, RuntimeError("pooled attempt failed; no retry budget"),
+                first_attempt,
+            )
+        attempt = first_attempt
+        while True:
+            try:
+                _inject_pool_fault(plan, idx, attempt, pooled=False)
+                payload = run_job(job)
+                payload["attempts"] = attempt + 1
+                return payload
+            except Exception as err:
+                if attempt >= max_retries:
+                    return _failure_payload(job, err, attempt + 1)
+                if plan is not None and plan.pool_backoff_s > 0:
+                    time.sleep(plan.pool_backoff_s * (2 ** attempt))
+                attempt += 1
 
     def _shape_groups(self) -> List[List[int]]:
         """Job indices grouped by shape, groups in first-occurrence order."""
@@ -367,18 +566,59 @@ class BatchRunner:
 
     def _run_pool(self, use_pool: bool) -> List[Dict[str, object]]:
         jobs = self.jobs
-        if not use_pool:
-            return [run_job(j) for j in jobs]
-        # Shape-grouped order: one chunk tends to hold one shape's jobs, so
-        # a worker's trace/descriptor caches stay warm within a chunk.
-        order = [i for grp in self._shape_groups() for i in grp]
-        chunksize = max(1, (len(jobs) + 4 * self.workers - 1) // (4 * self.workers))
-        with _pool_context().Pool(self.workers) as pool:
-            mapped = pool.map(run_job, [jobs[i] for i in order], chunksize=chunksize)
-        payloads: List[Optional[Dict[str, object]]] = [None] * len(jobs)
-        for i, p in zip(order, mapped):
-            payloads[i] = p
-        return payloads  # type: ignore[return-value]
+        plan = self.fault_plan
+        done = self._load_journal()
+        payloads: List[Optional[Dict[str, object]]] = [
+            done.get(i) for i in range(len(jobs))
+        ]
+        pending = [i for i in range(len(jobs)) if payloads[i] is None]
+        jfh = self._open_journal(resumed=bool(done))
+        try:
+            if not use_pool:
+                for i in pending:
+                    payloads[i] = self._run_one(i, jobs[i], first_attempt=0)
+                    self._journal_append(jfh, i, payloads[i])
+                return payloads  # type: ignore[return-value]
+            # Shape-grouped order: one chunk tends to hold one shape's jobs,
+            # so a worker's trace/descriptor caches stay warm within a chunk.
+            # One job per chunk under an injecting plan: a crash/hang must
+            # take down only its own job, never innocent chunk-mates.
+            pending_set = set(pending)
+            order = [i for grp in self._shape_groups() for i in grp
+                     if i in pending_set]
+            injecting = plan is not None and bool(plan.crash_jobs or plan.hang_jobs)
+            chunksize = 1 if injecting else max(
+                1, (len(order) + 4 * self.workers - 1) // (4 * self.workers))
+            timeout = plan.job_timeout_s if plan is not None else _DEFAULT_JOB_TIMEOUT_S
+            finished = 0
+            if order:
+                with _pool_context().Pool(self.workers) as pool:
+                    it = pool.imap(
+                        _pool_worker, [(i, jobs[i], plan) for i in order],
+                        chunksize=chunksize,
+                    )
+                    try:
+                        for k, i in enumerate(order):
+                            # per-result timeout: a dead/hung worker surfaces
+                            # here instead of blocking the sweep forever
+                            payloads[i] = it.next(timeout=timeout)
+                            self._journal_append(jfh, i, payloads[i])
+                            finished = k + 1
+                    except Exception:  # worker crash or mp.TimeoutError (hang)
+                        pool.terminate()
+            if finished < len(order):
+                # pool path degraded: the job at the failure point already
+                # burned attempt 0 in a worker; it and everything after it
+                # re-run in-process under the bounded retry budget
+                for k in range(finished, len(order)):
+                    i = order[k]
+                    payloads[i] = self._run_one(
+                        i, jobs[i], first_attempt=1 if k == finished else 0)
+                    self._journal_append(jfh, i, payloads[i])
+            return payloads  # type: ignore[return-value]
+        finally:
+            if jfh is not None:
+                jfh.close()
 
     def _run_vector(self, use_pool: bool) -> List[Dict[str, object]]:
         groups = self._shape_groups()

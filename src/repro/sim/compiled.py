@@ -77,7 +77,9 @@ __all__ = [
 ]
 
 #: bump when the CompiledTrace layout or key contents change
-_KEY_VERSION = "cc-trace-v2"
+#: (v3: SimConfig.fault_plan joined structural_key — fault-injected runs
+#: compile their own traces and fault-off keys changed shape)
+_KEY_VERSION = "cc-trace-v3"
 
 
 def _engine_ctor_kwargs() -> dict:
@@ -426,6 +428,10 @@ def run_compiled(sim: TPUSimulator) -> SimResult:
         sim.ici.total_wr_bytes = int(ici_w)
         sim.cache._writebacks = int(wrbk)
     sim._deferred_cache_state = trace.cache_state  # restored only on resume
+    # The replayed snapshot already contains every recorded fault event
+    # (including end-of-run RECOVERED sweeps); disarm this simulator's own
+    # fault state so a resume after replay cannot inject them twice.
+    sim._faults = None
     return result
 
 

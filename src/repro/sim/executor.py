@@ -40,12 +40,14 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, IO, List, Optional, Sequence, Tuple
 
+import heapq
 import io
 import re
 
 import numpy as np
 
 from repro.core.engine import CleanView, StatsEngine
+from repro.core.faults import FaultPlan
 from repro.core.query import StatsFrame
 from repro.core.sinks import ReportSink, render_text, stream_report
 from repro.core.stats import AccessOutcome, AccessType
@@ -67,6 +69,9 @@ _ICI_RCV = AccessType.ICI_RCV
 _HIT = AccessOutcome.HIT
 _MISS = AccessOutcome.MISS
 _RESFAIL = AccessOutcome.RESERVATION_FAILURE
+_FAULT = AccessType.FAULT
+_KERNEL_ABORT = AccessOutcome.KERNEL_ABORT
+_RECOVERED = AccessOutcome.RECOVERED
 
 
 @dataclass
@@ -99,6 +104,15 @@ class SimConfig:
     max_synth_beats: int = 4096  # beat granularity for aggregate-cost kernels
     #: straggler injection: stream_id -> slowdown factor (>1 = slower)
     stream_slowdown: Dict[int, float] = field(default_factory=dict)
+    #: deterministic fault injection (docs/DESIGN.md §5.11): a seeded
+    #: :class:`repro.core.faults.FaultPlan` whose ``kernel_faults`` specs the
+    #: executor schedules at absolute cycles both engine loops provably
+    #: visit — abort-at-cycle, transient slowdown windows, HBM stall bursts —
+    #: recording every fault/recovery on the FAULT stat row.  ``None`` (or a
+    #: plan with no kernel specs) is bit-identical to a build without the
+    #: subsystem.  Structural: a plan change is a different simulation, so
+    #: this field joins structural_key() and the compiled-trace cache key.
+    fault_plan: Optional[FaultPlan] = None
     #: main-loop implementation: "event" (cycle-skipping, default), "cycle"
     #: (reference cycle-stepped loop), or "compiled" (trace-compile/replay:
     #: the event loop runs once per scenario *shape* and every further run of
@@ -317,6 +331,138 @@ def _occupy_sequence(bw: Bandwidth, cycles: np.ndarray, nbytes: np.ndarray, wr_m
     bw.next_free_cycle = nf
 
 
+class _FaultState:
+    """Kernel-layer fault schedule for one simulation (docs/DESIGN.md §5.11).
+
+    Built from ``SimConfig.fault_plan.kernel_faults`` when non-empty; the
+    simulator carries ``_faults = None`` otherwise, so fault-plan-off runs
+    execute exactly the pre-fault code path.
+
+    Every injection lands at an *absolute cycle* that both engine loops
+    provably visit: the cycle loop visits every cycle, and the event loop
+    caps its next-cycle jump and both fast-forward windows at :attr:`next`
+    (the earliest pending fault cycle).  Specs targeting the k-th kernel
+    launched on a stream are armed by :meth:`arm_launch` (relative ``after``
+    becomes absolute at launch); ``hbm_stall`` specs are absolute from the
+    start.  Conservation: every spec resolves exactly once — ``KERNEL_ABORT``
+    when an abort kills work, else ``RECOVERED`` (slowdown window closed,
+    stall applied, kernel retired first, or target never launched — the last
+    two swept by :meth:`on_retire` / :meth:`finish`).
+    """
+
+    __slots__ = ("specs", "resolved", "by_launch", "launch_counts",
+                 "pending", "next", "armed", "_seq")
+
+    _SENTINEL = 1 << 62
+
+    def __init__(self, plan: FaultPlan) -> None:
+        self.specs = plan.kernel_faults
+        self.resolved = [False] * len(self.specs)
+        #: (stream, per-stream launch index) -> spec indices armed there
+        self.by_launch: Dict[Tuple[int, int], List[int]] = {}
+        self.launch_counts: Dict[int, int] = {}
+        #: min-heap of (cycle, seq, action, spec index, run); seq breaks ties
+        #: deterministically (spec order) and keeps runs out of comparisons
+        self.pending: List[Tuple[int, int, str, int, Optional[_Run]]] = []
+        self.armed: Dict[_Run, List[int]] = {}
+        self._seq = 0
+        self.next = self._SENTINEL
+        for i, spec in enumerate(self.specs):
+            if spec.kind == "hbm_stall":
+                self._push(spec.after, "hbm", i, None)
+            else:
+                self.by_launch.setdefault((spec.stream, spec.kernel), []).append(i)
+
+    def _push(self, cycle: int, action: str, i: int, run: Optional[_Run]) -> None:
+        heapq.heappush(self.pending, (cycle, self._seq, action, i, run))
+        self._seq += 1
+        if cycle < self.next:
+            self.next = cycle
+
+    def arm_launch(self, run: _Run, sid: int, cycle: int) -> None:
+        """Hook in :meth:`TPUSimulator._launch`: schedule the specs that
+        target this (stream, launch-index) at their absolute cycles."""
+        k = self.launch_counts.get(sid, 0)
+        self.launch_counts[sid] = k + 1
+        ids = self.by_launch.get((sid, k))
+        if not ids:
+            return
+        for i in ids:
+            spec = self.specs[i]
+            self._push(
+                cycle + spec.after,
+                "abort" if spec.kind == "abort" else "slow_start",
+                i,
+                run,
+            )
+        self.armed[run] = list(ids)
+
+    def process(self, sim: "TPUSimulator", cycle: int) -> None:
+        """Apply every pending fault due at ``cycle``.  Called from the same
+        position in both loop bodies (after the launch step), and the loops
+        guarantee each event's exact cycle is visited, so the applications —
+        and the stat events they record — are identical across engines."""
+        pending = self.pending
+        while pending and pending[0][0] <= cycle:
+            _, _, action, i, run = heapq.heappop(pending)
+            if self.resolved[i]:
+                continue  # run retired first — already swept as RECOVERED
+            spec = self.specs[i]
+            if action == "abort":
+                # Discard remaining work; the clamps make the normal retire
+                # condition (drained + compute_end + next_issue_cycle ≤ now)
+                # hold this cycle, so the kernel exits through _retire with
+                # its timeline row and exit report intact.
+                run.syn_rd = run.syn_wr = run.syn_ici = 0
+                run.trace_pos = run.trace_len
+                if run.compute_end > cycle:
+                    run.compute_end = cycle
+                if run.next_issue_cycle > cycle:
+                    run.next_issue_cycle = cycle
+                self.resolved[i] = True
+                sim._count(_FAULT, _KERNEL_ABORT, spec.stream, cycle, 1)
+            elif action == "slow_start":
+                run.slowdown = spec.factor
+                run.issue_tokens = 0.0
+                self._push(cycle + spec.duration, "slow_end", i, run)
+            elif action == "slow_end":
+                run.slowdown = sim.cfg.stream_slowdown.get(run.sid, 1.0)
+                # Zeroing the fractional tokens makes the window boundary a
+                # clean state (and re-enables fast-forward eligibility).
+                run.issue_tokens = 0.0
+                self.resolved[i] = True
+                sim._count(_FAULT, _RECOVERED, spec.stream, cycle, 1)
+            else:  # hbm_stall: push the HBM token bucket into the future
+                bw = sim.hbm
+                nf = bw.next_free_cycle
+                bw.next_free_cycle = (nf if nf > cycle else float(cycle)) + spec.duration
+                self.resolved[i] = True
+                sim._count(_FAULT, _RECOVERED, spec.stream, cycle, 1)
+        self.next = pending[0][0] if pending else self._SENTINEL
+
+    def on_retire(self, sim: "TPUSimulator", run: _Run, cycle: int) -> None:
+        """A retiring kernel resolves its still-pending specs as RECOVERED
+        (the fault window never closed / never fired before the exit)."""
+        ids = self.armed.pop(run, None)
+        if ids:
+            for i in ids:
+                if not self.resolved[i]:
+                    self.resolved[i] = True
+                    sim._count(_FAULT, _RECOVERED, self.specs[i].stream, cycle, 1)
+
+    def finish(self, sim: "TPUSimulator", cycle: int) -> None:
+        """End of run: any spec that never resolved (target kernel never
+        launched, or an absolute cycle past the end) sweeps to RECOVERED at
+        the final cycle — this is what makes conservation exact for *any*
+        plan against *any* workload."""
+        for i, spec in enumerate(self.specs):
+            if not self.resolved[i]:
+                self.resolved[i] = True
+                sim._count(_FAULT, _RECOVERED, spec.stream, cycle, 1)
+        self.pending.clear()
+        self.next = self._SENTINEL
+
+
 class TPUSimulator:
     """Discrete-event simulator with per-stream stat tracking."""
 
@@ -369,6 +515,10 @@ class TPUSimulator:
         self._n_synth = 0  # active runs without an explicit trace (FF-eligible)
         self._cycle = 0
         self._frame: Optional[StatsFrame] = None  # lazy; rebuilt on engine swap
+        # Fault injection: None unless the plan carries kernel-layer specs,
+        # so fault-plan-off runs take exactly the pre-fault code path.
+        plan = self.cfg.fault_plan
+        self._faults = _FaultState(plan) if plan is not None and plan.kernel_faults else None
 
     # -- stream/launch API (mirrors cuda<<<>>> + events) -------------------------
     def create_stream(self, name: str = "", priority: int = 0):
@@ -438,6 +588,8 @@ class TPUSimulator:
             self._n_synth += 1
         self.timeline.on_launch(w.stream_id, desc.uid, cycle, desc.name)
         self._emit(f"launching kernel name: {desc.name} uid: {desc.uid} stream: {w.stream_id}")
+        if self._faults is not None:
+            self._faults.arm_launch(run, w.stream_id, cycle)
         return run
 
     def _run_cycle(self) -> None:
@@ -457,6 +609,13 @@ class TPUSimulator:
             if cands:
                 self._launch(cands[0], cycle)
 
+            # Apply faults due this cycle (after the launch step, so specs
+            # armed with after=0 fire immediately; same position as the
+            # event loop, keeping the two engines' event orders identical).
+            faults = self._faults
+            if faults is not None and faults.next <= cycle:
+                faults.process(self, cycle)
+
             # Issue memory accesses for every active kernel (uid order — the
             # deterministic analog of GPGPU-Sim's core iteration order).
             for run in list(self._active):
@@ -468,6 +627,8 @@ class TPUSimulator:
                     self._retire(run, cycle)
 
             self._cycle += 1
+        if self._faults is not None:
+            self._faults.finish(self, self._cycle)
 
     def _run_event(self) -> None:
         """Event-driven loop with exact cycle-skipping.
@@ -493,7 +654,10 @@ class TPUSimulator:
         cache = self.cache
         heap = cache._mshr_heap
         max_cycles = cfg.max_cycles
+        faults = self._faults
         if streams.pending() == 0:
+            if faults is not None:
+                faults.finish(self, self._cycle)
             return
         launch_ready = True
         cycle = self._cycle
@@ -510,6 +674,12 @@ class TPUSimulator:
                     launch_ready = False
                 else:
                     self._launch(w, cycle)
+
+            # Apply faults due this cycle (same loop position as the cycle
+            # engine; the nxt / fast-forward caps below guarantee every
+            # pending fault's exact cycle is visited).
+            if faults is not None and faults.next <= cycle:
+                faults.process(self, cycle)
 
             # Collapse deterministic stretches into one vectorized batch:
             # pure synthesized-beat windows, or dependent hit-chain windows.
@@ -558,10 +728,14 @@ class TPUSimulator:
                     self._retire(run, cycle)
                 if streams.pending() == 0:
                     self._cycle = cycle + 1
+                    if faults is not None:
+                        faults.finish(self, self._cycle)
                     return
                 launch_ready = True
                 if cycle + 1 < nxt:
                     nxt = cycle + 1
+            if faults is not None and faults.next < nxt:
+                nxt = faults.next  # visit the fault's exact cycle
             cycle = nxt
 
     # -- access issue ------------------------------------------------------------------
@@ -720,6 +894,9 @@ class TPUSimulator:
         rc = self.cache.earliest_ready()
         if rc is not None and rc < E:
             E = rc  # never emit past a pending MSHR install
+        faults = self._faults
+        if faults is not None and faults.next < E:
+            E = faults.next  # never emit across a pending fault cycle
         if E <= cycle:
             return cycle
 
@@ -864,6 +1041,9 @@ class TPUSimulator:
         rc = cache.earliest_ready()
         if rc is not None and rc < E:
             E = rc  # promotions mutate residency/LRU — end the window first
+        faults = self._faults
+        if faults is not None and faults.next < E:
+            E = faults.next  # never emit across a pending fault cycle
         if E <= cycle or scanners is None:
             return cycle
 
@@ -976,8 +1156,10 @@ class TPUSimulator:
             else:
                 wait = max(last_decision.ready_cycle - cycle, 1)
             # straggler injection scales the dependent-load latency too
-            slowdown = cfg.stream_slowdown.get(sid, 1.0)
-            run.next_issue_cycle = cycle + int(wait * slowdown)
+            # (run.slowdown, not the config base: transient fault slowdown
+            # windows live on the run, and the event engine's inlined hot
+            # path already reads run.slowdown)
+            run.next_issue_cycle = cycle + int(wait * run.slowdown)
         return last_decision
 
     def _next_access(self, run: _Run) -> Optional[Tuple[Access, int]]:
@@ -1015,6 +1197,10 @@ class TPUSimulator:
 
     # -- retire ------------------------------------------------------------------------
     def _retire(self, run: _Run, cycle: int) -> None:
+        if self._faults is not None:
+            # Resolve this run's still-pending fault specs before the exit
+            # report renders, so the report's stream stats include them.
+            self._faults.on_retire(self, run, cycle)
         self._active.remove(run)
         if run.trace is None:
             self._n_synth -= 1

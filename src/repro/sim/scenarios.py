@@ -49,6 +49,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .executor import SimConfig, SimResult, TPUSimulator
 from .kernel_desc import KernelDesc, LINE_SIZE, pointer_chase_trace, streaming_trace
+from repro.core.faults import FaultPlan, KernelFaultSpec
 from repro.core.query import StatsFrame
 from repro.core.sinks import ReportSink
 from repro.core.stats import AccessType
@@ -69,14 +70,17 @@ __all__ = [
 ]
 
 #: Oracle key convention (see module docstring) — exactly what
-#: :meth:`repro.core.query.StatsFrame.outcome_counts` returns.  The last
+#: :meth:`repro.core.query.StatsFrame.outcome_counts` returns.  The middle
 #: four keys are the miss-path mechanism lanes (``SimConfig.miss_mechanism``,
 #: docs/DESIGN.md §5.10); they stay 0 under ``miss_mechanism="none"`` and
 #: ``TOTAL`` (every successful demand access, counted once) is
-#: mechanism-invariant by conservation.
+#: mechanism-invariant by conservation.  The last five are the
+#: fault-injection lanes (``SimConfig.fault_plan``, docs/DESIGN.md §5.11);
+#: they stay 0 without a plan and never join ``TOTAL``.
 ORACLE_KEYS = (
     "HIT", "MSHR_HIT", "MISS", "RES_FAIL", "TOTAL",
     "VICTIM_HIT", "MISS_CACHE_HIT", "PREFETCH_HIT", "PREFETCH_ISSUED",
+    "KERNEL_ABORT", "RETRY", "TIMEOUT_EXPIRED", "SHED", "RECOVERED",
 )
 
 #: Launch.stream value meaning "the default stream" (id 0, like CUDA's).
@@ -99,6 +103,12 @@ def register_mech_oracle(name: str, adjuster: Callable) -> None:
 
 _ZERO_MECH_LANES = {
     "VICTIM_HIT": 0, "MISS_CACHE_HIT": 0, "PREFETCH_HIT": 0, "PREFETCH_ISSUED": 0,
+}
+
+#: Fault lanes pinned to zero — what every non-fault scenario's oracle can
+#: assert without a FaultPlan (docs/DESIGN.md §5.11).
+_ZERO_FAULT_LANES = {
+    "KERNEL_ABORT": 0, "RETRY": 0, "TIMEOUT_EXPIRED": 0, "SHED": 0, "RECOVERED": 0,
 }
 
 
@@ -651,6 +661,90 @@ def straggler(fast_streams=3, short_kernels=6, short_lines=16, long_lines=2048,
     return launches, expected, config
 
 
+# --------------------------------------------------------------------------- fault scenarios (§5.11)
+@scenario("fault_kernel_abort", space={"streams": (2, 3), "abort_after": (5, 1000)})
+def fault_kernel_abort(streams=3, lines=64, abort_after=40, abort_streams=1):
+    """Fault injection: every stream runs one synthesized read kernel; the
+    first ``abort_streams`` streams carry an abort spec firing ``abort_after``
+    cycles after their kernel's launch (``SimConfig.fault_plan``).
+
+    Oracle (all synthesized, so fully analytic): a kernel issues
+    ``issue_width`` single-line beats per cycle from its launch cycle, and an
+    abort is processed *before* that cycle's issue — so a victim lands
+    ``min(lines, abort_after * issue_width)`` MISSes.  Valid for
+    ``lines <= SimConfig.max_synth_beats`` (4096): above it, aggregate-cost
+    beats coalesce multiple lines each and the per-cycle line rate exceeds
+    ``issue_width``, so the issued-before-abort count no longer holds.  The spec resolves
+    ``KERNEL_ABORT`` iff it fired while work remained, else the kernel won
+    the race and it sweeps to ``RECOVERED`` — conservation's two-sided coin,
+    pinned per stream.  Healthy streams keep all fault lanes at 0.
+    """
+    launches = []
+    expected = {}
+    faults = []
+    for s in range(streams):
+        kd, n = _synth(f"fk{s}", rd=lines * LINE_SIZE, base=(s + 2) << 22)
+        w = kd.issue_width
+        launches.append(Launch(f"s_{s}", kd))
+        row = {**_miss_only(n), **_ZERO_FAULT_LANES}
+        if s < abort_streams:
+            issued = min(n, abort_after * w)
+            aborted = issued < n
+            row.update(
+                MISS=issued, TOTAL=issued,
+                KERNEL_ABORT=int(aborted), RECOVERED=int(not aborted),
+            )
+            # stream ids bind in order of first appearance (default stream
+            # is 0), so stream name "s_{s}" is id s+1; each stream launches
+            # exactly one kernel, so the per-stream launch index is 0
+            faults.append(
+                KernelFaultSpec("abort", stream=s + 1, kernel=0, after=int(abort_after))
+            )
+        expected[f"s_{s}"] = row
+    return launches, expected, {"fault_plan": FaultPlan(kernel_faults=tuple(faults))}
+
+
+@scenario("fault_straggler", space={"slow_factor": (2.0, 4.0), "hbm_stall_at": (0, 64)})
+def fault_straggler(fast_streams=2, short_kernels=3, short_lines=16, long_lines=512,
+                    slow_after=20, slow_duration=200, slow_factor=3.0,
+                    hbm_stall_at=0, hbm_stall_cycles=100):
+    """Fault injection: the straggler shape under *transient* faults — the
+    laggard's long kernel gets a slowdown window (issue rate divided by
+    ``slow_factor`` for ``slow_duration`` cycles starting ``slow_after``
+    cycles after launch), plus an optional HBM stall burst at absolute cycle
+    ``hbm_stall_at`` (0 = off), both attributed to the laggard stream.
+
+    Oracle: transient faults stretch the timeline, never the counts — every
+    MISS count matches the fault-free straggler exactly, ``KERNEL_ABORT``
+    stays 0 everywhere, and the laggard's ``RECOVERED`` equals the number of
+    injected specs (each transient resolves exactly once: window closed,
+    stall applied, or swept at retire/end-of-run).
+    """
+    launches = []
+    kd, n_long = _synth("fs_laggard", rd=long_lines * LINE_SIZE, base=1 << 28)
+    launches.append(Launch("laggard", kd))
+    zeros = dict(_ZERO_FAULT_LANES)
+    faults = [
+        KernelFaultSpec("slowdown", stream=1, kernel=0, after=int(slow_after),
+                        duration=int(slow_duration), factor=float(slow_factor)),
+    ]
+    if hbm_stall_at:
+        faults.append(
+            KernelFaultSpec("hbm_stall", stream=1, after=int(hbm_stall_at),
+                            duration=int(hbm_stall_cycles))
+        )
+    expected = {"laggard": {**_miss_only(n_long), **zeros, "RECOVERED": len(faults)}}
+    for s in range(fast_streams):
+        total = 0
+        for i in range(short_kernels):
+            kd, n = _synth(f"fs{s}_{i}", rd=short_lines * LINE_SIZE,
+                           base=((s * short_kernels + i) + 2) << 20)
+            launches.append(Launch(f"fast_{s}", kd))
+            total += n
+        expected[f"fast_{s}"] = {**_miss_only(total), **zeros}
+    return launches, expected, {"fault_plan": FaultPlan(kernel_faults=tuple(faults))}
+
+
 # --------------------------------------------------------------------------- mechanism oracle wiring
 def _cache_thrash_mech_oracle(params, config, expected):
     """cache_thrash under a mechanism (two dependent chases over disjoint
@@ -742,8 +836,11 @@ def _producer_consumer_mech_oracle(params, config, expected):
 
 # Synthesized-beat scenarios never exercise the line cache: every mechanism
 # is provably inert (fast-forward windows stay exact — docs/DESIGN.md §5.10).
+# The fault scenarios are synthesized too, so their oracles — fault lanes
+# included — hold verbatim under every mechanism.
 for _name in ("priority_preemption", "copy_compute_overlap", "fork_join",
-              "poisson_burst", "mps_like", "straggler"):
+              "poisson_burst", "mps_like", "straggler",
+              "fault_kernel_abort", "fault_straggler"):
     register_mech_oracle(_name, mech_invariant_oracle)
 register_mech_oracle("cache_thrash", _cache_thrash_mech_oracle)
 register_mech_oracle("producer_consumer", _producer_consumer_mech_oracle)

@@ -33,14 +33,15 @@ API_SURFACE = {
     "repro.core": [
         "ALL_STREAMS", "AccessOutcome", "AccessType", "CSVSink",
         "CleanStatTable", "CleanView", "DEFAULT_STREAM", "EventJournal",
-        "FailOutcome", "FrameGroupBy", "JSONSink", "KernelTime",
+        "FAULT_KINDS", "FAULT_LANES", "FailOutcome", "FaultPlan",
+        "FrameGroupBy", "JSONSink", "KernelFaultSpec", "KernelTime",
         "KernelTimeline", "MultiSink", "QueryError", "Report", "ReportSink",
         "StatBlock", "StatCollector", "StatTable", "StatsEngine",
         "StatsFrame", "StepCost", "StepRecord", "Stream", "StreamEvent",
         "StreamManager", "StreamStats", "TextSink", "WorkItem",
-        "current_stream", "format_breakdown", "frame_block", "make_sink",
-        "merged_report", "namespace_stream", "render_text",
-        "split_namespaced", "stream_report", "stream_scope",
+        "check_sim_conservation", "current_stream", "format_breakdown",
+        "frame_block", "make_sink", "merged_report", "namespace_stream",
+        "render_text", "split_namespaced", "stream_report", "stream_scope",
     ],
     "repro.sim": [
         "Access", "Bandwidth", "BatchJob", "BatchResult", "BatchRunner",

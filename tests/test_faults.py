@@ -1,0 +1,233 @@
+"""Fault-injection subsystem (docs/DESIGN.md §5.11).
+
+The contracts under test, layer by layer:
+
+* **kernel** — for any seeded :class:`FaultPlan`, (a) the conservation
+  oracle holds (every spec resolves exactly once: ``KERNEL_ABORT`` or
+  ``RECOVERED``), (b) the cycle and event engines stay signature-identical,
+  and (c) a fault-off config is bit-identical to the pre-subsystem goldens.
+* **serve** — queue-overflow shedding, bounded retry/backoff, deadlines and
+  cancellation keep their own ledger (``SHED == terminal sheds + RETRY +
+  cancellations``; ``RECOVERED`` counts exactly the requests that finished
+  despite a fault), and ``run_until_idle`` refuses to livelock.
+* **pool** — the fault schedule is a pure function of (job index, attempt),
+  so pooled and serial sweeps fail and recover bit-identically; a killed
+  sweep resumes from its journal bit-identically.
+"""
+
+import os
+import pickle
+
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ModuleNotFoundError:
+    # hypothesis is a dev-only dependency (requirements-dev.txt).  Without it
+    # the property tests skip but the deterministic tests below still run.
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    def given(*_a, **_k):
+        return lambda fn: pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+    class _AnyStrategy:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    class HealthCheck:
+        too_slow = None
+
+from repro.core.faults import (
+    FAULT_KINDS,
+    FAULT_LANES,
+    FaultPlan,
+    KernelFaultSpec,
+    check_sim_conservation,
+)
+from repro.sim.batch import BatchRunner, sweep_jobs
+from repro.sim.executor import SimConfig
+from repro.sim.scenarios import build
+
+# --------------------------------------------------------------------- helpers
+
+#: pre-subsystem golden cycle counts (test_scenarios.GOLDEN_CYCLES excerpt):
+#: fault-plan-off must reproduce these bit-for-bit on every engine.
+FAULT_OFF_GOLDENS = {"cache_thrash": 9602, "mixed_stream": 240, "straggler": 512}
+
+
+def _run(scenario, engine, plan=None, **params):
+    inst = build(scenario, **params)
+    cfg = SimConfig()
+    if plan is not None:
+        cfg.fault_plan = plan
+    return inst.run(engine=engine, config=cfg)
+
+
+def _mixed_plan(seed=0):
+    return FaultPlan(seed=seed, kernel_faults=(
+        KernelFaultSpec("abort", stream=1, kernel=0, after=40),
+        KernelFaultSpec("slowdown", stream=2, kernel=0, after=10,
+                        duration=150, factor=3.0),
+        KernelFaultSpec("hbm_stall", stream=1, after=25, duration=80),
+        KernelFaultSpec("abort", stream=3, kernel=5, after=10),
+    ))
+
+
+# ---------------------------------------------------------------- kernel layer
+class TestKernelFaults:
+    @pytest.mark.parametrize("scenario", sorted(FAULT_OFF_GOLDENS))
+    @pytest.mark.parametrize("engine", ["cycle", "event", "compiled"])
+    def test_fault_off_bit_identity_vs_goldens(self, scenario, engine):
+        """No plan, and an empty plan, both reproduce the pre-subsystem
+        goldens exactly — the subsystem is invisible when off."""
+        bare = _run(scenario, engine)
+        empty = _run(scenario, engine, plan=FaultPlan())
+        assert bare.cycles == FAULT_OFF_GOLDENS[scenario]
+        assert bare.signature() == empty.signature()
+
+    @pytest.mark.parametrize("scenario", ["cache_thrash", "mixed_stream", "straggler"])
+    def test_engine_identity_and_conservation_under_plan(self, scenario):
+        plan = _mixed_plan()
+        res = {e: _run(scenario, e, plan=plan) for e in ("cycle", "event", "compiled")}
+        assert res["cycle"].signature() == res["event"].signature()
+        assert res["event"].signature() == res["compiled"].signature()
+        check = check_sim_conservation(res["event"], plan)
+        assert check["ok"], check["mismatches"]
+
+    def test_abort_kills_work(self):
+        off = _run("cache_thrash", "event")
+        on = _run("cache_thrash", "event",
+                  plan=FaultPlan(kernel_faults=(
+                      KernelFaultSpec("abort", stream=1, kernel=0, after=5),)))
+        assert on.cycles < off.cycles
+        counts = on.frame.filter(stream=1).outcome_counts()
+        assert counts["KERNEL_ABORT"] == 1
+        assert counts["TOTAL"] < off.frame.filter(stream=1).outcome_counts()["TOTAL"]
+
+    def test_never_launched_target_recovers(self):
+        """A spec aimed at a kernel that never launches must still resolve
+        (RECOVERED at end-of-sim) — conservation has no leaks."""
+        plan = FaultPlan(kernel_faults=(
+            KernelFaultSpec("abort", stream=7, kernel=99, after=10),))
+        res = _run("cache_thrash", "event", plan=plan)
+        check = check_sim_conservation(res, plan)
+        assert check["ok"], check["mismatches"]
+        assert check["per_stream"][7]["RECOVERED"] == 1
+
+    def test_plan_is_structural(self):
+        a, b = SimConfig(), SimConfig()
+        b.fault_plan = _mixed_plan()
+        assert a.structural_key() != b.structural_key()
+        c = SimConfig()
+        c.fault_plan = _mixed_plan()
+        assert b.structural_key() == c.structural_key()
+
+    @settings(max_examples=12, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(specs=st.lists(
+        st.builds(
+            KernelFaultSpec,
+            kind=st.sampled_from(FAULT_KINDS),
+            stream=st.integers(min_value=1, max_value=3),
+            kernel=st.integers(min_value=0, max_value=3),
+            after=st.integers(min_value=0, max_value=3000),
+            duration=st.integers(min_value=0, max_value=400),
+            factor=st.floats(min_value=1.5, max_value=8.0),
+        ),
+        min_size=1, max_size=5,
+    ), seed=st.integers(min_value=0, max_value=2**32 - 1))
+    def test_random_plans_conserve_and_agree(self, specs, seed):
+        plan = FaultPlan(seed=seed, kernel_faults=tuple(specs))
+        cyc = _run("mixed_stream", "cycle", plan=plan)
+        evt = _run("mixed_stream", "event", plan=plan)
+        assert cyc.signature() == evt.signature()
+        check = check_sim_conservation(evt, plan)
+        assert check["ok"], check["mismatches"]
+
+
+# ------------------------------------------------------------------ pool layer
+JOBS = lambda: sweep_jobs(  # noqa: E731 - fresh list per test
+    scenarios=["l2_lat", "cache_thrash", "mixed_stream"], engines=("event",))
+
+
+class TestPoolFaults:
+    def test_pooled_equals_serial_under_faults(self):
+        plan = FaultPlan(seed=1, crash_jobs=(0,), hang_jobs=(2,),
+                         fail_attempts=1, pool_max_retries=2, job_timeout_s=2.0)
+        jobs = JOBS()
+        par = BatchRunner(jobs, workers=2, fault_plan=plan).run(parallel=True)
+        ser = BatchRunner(jobs, workers=2, fault_plan=plan).run(parallel=False)
+        assert par.signature() == ser.signature()
+        assert not par.failures()
+        assert [p["attempts"] for p in par.payloads] == [2, 1, 2]
+        fr = par.frame()
+        assert int(fr.filter(outcome="RETRY").sum()) == 2
+        assert int(fr.filter(outcome="RECOVERED").sum()) == 2
+
+    def test_retry_exhaustion_degrades_gracefully(self):
+        plan = FaultPlan(seed=1, crash_jobs=(1,), fail_attempts=10,
+                         pool_max_retries=1, job_timeout_s=2.0)
+        jobs = JOBS()
+        par = BatchRunner(jobs, workers=2, fault_plan=plan).run(parallel=True)
+        ser = BatchRunner(jobs, workers=2, fault_plan=plan).run(parallel=False)
+        assert par.signature() == ser.signature()
+        assert [f["job_index"] for f in par.failures()] == [1]
+        assert par.payloads[1]["failed"] and par.payloads[1]["attempts"] == 2
+        assert int(par.frame().filter(outcome="SHED").sum()) == 1
+        # surviving jobs still merged and queryable
+        assert par.payloads[0]["oracle"]["ok"]
+        with pytest.raises(ValueError, match="failed after"):
+            par.job_frame(1)
+
+    def test_journal_resume_bit_identical(self, tmp_path):
+        plan = FaultPlan(seed=1, crash_jobs=(0,), fail_attempts=1,
+                         pool_max_retries=2, job_timeout_s=5.0)
+        jobs = JOBS()
+        journal = str(tmp_path / "sweep.journal")
+        ref = BatchRunner(jobs, workers=2, fault_plan=plan,
+                          journal=journal).run(parallel=True)
+        full = open(journal, "rb").read()
+        # simulate a mid-sweep kill: header + first payload + a torn record
+        with open(journal, "rb") as fh:
+            pickle.load(fh)  # header
+            pickle.load(fh)  # first payload
+            cut = fh.tell()
+        with open(journal, "wb") as fh:
+            fh.write(full[:cut])
+            fh.write(b"\x80\x04torn-tail")
+        resumed = BatchRunner(jobs, workers=2, fault_plan=plan,
+                              journal=journal).run(parallel=True)
+        assert resumed.signature() == ref.signature()
+
+    def test_stale_journal_ignored(self, tmp_path):
+        journal = str(tmp_path / "sweep.journal")
+        jobs = JOBS()
+        BatchRunner(jobs, workers=2, journal=journal).run(parallel=False)
+        other = sweep_jobs(scenarios=["l2_lat"], engines=("event",))
+        res = BatchRunner(other, workers=1, journal=journal).run(parallel=False)
+        ref = BatchRunner(other, workers=1).run(parallel=False)
+        assert res.signature() == ref.signature()
+
+    def test_vector_backend_rejects_pool_faults(self):
+        with pytest.raises(ValueError, match="backend='pool'"):
+            BatchRunner(JOBS(), backend="vector", fault_plan=FaultPlan())
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(min_value=0, max_value=2**32 - 1),
+           job=st.integers(min_value=0, max_value=63),
+           attempt=st.integers(min_value=0, max_value=4))
+    def test_schedules_are_pure_functions(self, seed, job, attempt):
+        """Same seed ⇒ identical schedule wherever it is evaluated — the
+        property the pooled==serial identity rests on."""
+        a = FaultPlan(seed=seed, crash_jobs=(1, 5), hang_jobs=(2,),
+                      fail_attempts=2, backoff_jitter=7)
+        b = FaultPlan(seed=seed, crash_jobs=(1, 5), hang_jobs=(2,),
+                      fail_attempts=2, backoff_jitter=7)
+        assert a.pool_fault(job, attempt) == b.pool_fault(job, attempt)
+        assert a.backoff_steps(attempt, job) == b.backoff_steps(attempt, job)
+        assert 0 <= a.jitter(job, attempt) <= 7
+        assert a.backoff_steps(attempt, job) >= a.backoff_base * 2 ** attempt

@@ -60,6 +60,8 @@ GOLDEN_CYCLES_NONE = {
     "cache_thrash": 9602,
     "copy_compute_overlap": 798,
     "deepbench": 5133,
+    "fault_kernel_abort": 18,
+    "fault_straggler": 262,
     "fork_join": 163,
     "l2_lat": 608,
     "mixed_stream": 240,

@@ -36,6 +36,8 @@ GOLDEN_CYCLES = {
     "cache_thrash": 9602,
     "copy_compute_overlap": 798,
     "deepbench": 5133,
+    "fault_kernel_abort": 18,
+    "fault_straggler": 262,
     "fork_join": 163,
     "l2_lat": 608,
     "mixed_stream": 240,
@@ -83,6 +85,12 @@ def stream_split(res, sid):
         "MSHR_HIT": int(m[:, AccessOutcome.HIT_RESERVED].sum()),
         "MISS": int(m[:, AccessOutcome.MISS].sum()),
         "RES_FAIL": int(m[:, AccessOutcome.RESERVATION_FAILURE].sum()),
+        # fault-injection lanes (docs/DESIGN.md §5.11; zero without a plan)
+        "KERNEL_ABORT": int(m[:, AccessOutcome.KERNEL_ABORT].sum()),
+        "RETRY": int(m[:, AccessOutcome.RETRY].sum()),
+        "TIMEOUT_EXPIRED": int(m[:, AccessOutcome.TIMEOUT_EXPIRED].sum()),
+        "SHED": int(m[:, AccessOutcome.SHED].sum()),
+        "RECOVERED": int(m[:, AccessOutcome.RECOVERED].sum()),
     }
     out["TOTAL"] = out["HIT"] + out["MSHR_HIT"] + out["MISS"]
     return out

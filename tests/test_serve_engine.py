@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
+from repro.core.faults import FaultPlan
 from repro.models import init_params, model_defs
 from repro.serve import Engine, Request, ServeConfig
 
@@ -117,3 +118,110 @@ class TestSampling:
         assert toks.shape == (2,)
         assert toks.dtype == np.int32
         assert all(0 <= int(t) < cfg.vocab_size for t in toks)
+
+
+class TestFaultInjection:
+    """Request-layer faults (docs/DESIGN.md §5.11): overflow shedding,
+    retry/backoff, deadlines, cancellation — each accounted exactly once in
+    the per-stream fault lanes."""
+
+    def test_overflow_sheds_retries_and_conserves(self, model_setup):
+        cfg, params = model_setup
+        plan = FaultPlan(seed=3, queue_limit=2, max_retries=2, backoff_base=1)
+        eng = Engine(cfg, params, ServeConfig(n_slots=1, max_len=64, fault_plan=plan))
+        for r in _requests(cfg, 5, seed=8):
+            eng.submit(r)
+        done = eng.run_until_idle()
+        lanes = eng.fault_summary()["lanes"]
+        terminal_shed = sum(1 for r in done if r.status == "shed")
+        recovered = sum(1 for r in done if r.status == "done" and r.retries > 0)
+        # conservation: every shed event either became a retry or went terminal
+        assert lanes["SHED"] == terminal_shed + lanes["RETRY"]
+        assert lanes["RECOVERED"] == recovered > 0
+        assert lanes["TIMEOUT_EXPIRED"] == 0
+        assert terminal_shed > 0  # budget is finite: someone was dropped
+        shed = [r for r in done if r.status == "shed"]
+        assert all(r.retries == plan.max_retries for r in shed)
+
+    def test_priority_decides_shed_victim(self, model_setup):
+        cfg, params = model_setup
+        plan = FaultPlan(queue_limit=1, max_retries=0)
+        eng = Engine(cfg, params, ServeConfig(n_slots=1, max_len=64, fault_plan=plan))
+        lo, hi = _requests(cfg, 2, seed=9)
+        lo.priority, hi.priority = 0, 5
+        eng.submit(lo)
+        eng.submit(hi)  # overflow: lowest priority is shed, not the arrival
+        assert lo.status == "shed" and lo.done
+        done = eng.run_until_idle() + eng.drain_retired()
+        assert {r.name: r.status for r in done}[hi.name] == "done"
+
+    def test_deadline_expiry_across_queue_and_slots(self, model_setup):
+        cfg, params = model_setup
+        plan = FaultPlan(deadline_steps=3)
+        eng = Engine(cfg, params, ServeConfig(n_slots=1, max_len=64, fault_plan=plan))
+        reqs = _requests(cfg, 3, seed=10, max_new=8)
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run_until_idle()
+        lanes = eng.fault_summary()["lanes"]
+        timeouts = [r for r in done if r.status == "timeout"]
+        assert timeouts and lanes["TIMEOUT_EXPIRED"] == len(timeouts)
+        assert all(r.done for r in done)
+
+    def test_per_request_deadline_without_plan(self, model_setup):
+        cfg, params = model_setup
+        eng = Engine(cfg, params, ServeConfig(n_slots=1, max_len=64))
+        fast, slow = _requests(cfg, 2, seed=11, max_new=8)
+        slow.deadline_steps = 2
+        eng.submit(fast)
+        eng.submit(slow)
+        statuses = {r.name: r.status for r in eng.run_until_idle()}
+        assert statuses[fast.name] == "done"
+        assert statuses[slow.name] == "timeout"
+
+    def test_cancel_everywhere(self, model_setup):
+        cfg, params = model_setup
+        eng = Engine(cfg, params, ServeConfig(n_slots=1, max_len=64))
+        queued, active = _requests(cfg, 2, seed=12, max_new=6)
+        eng.submit(active)
+        eng.step()  # active now holds the slot
+        eng.submit(queued)
+        assert eng.cancel(queued) is True
+        assert eng.cancel(active) is True
+        assert eng.cancel(active) is False  # already gone
+        assert queued.status == active.status == "cancelled"
+        assert eng.run_until_idle() == []
+        assert eng.fault_summary()["lanes"]["SHED"] == 2
+
+    def test_recovered_requests_complete_normally(self, model_setup):
+        """A shed-then-retried request still generates its full output."""
+        cfg, params = model_setup
+        plan = FaultPlan(queue_limit=1, max_retries=3, backoff_base=1)
+        eng = Engine(cfg, params, ServeConfig(n_slots=1, max_len=64, fault_plan=plan))
+        reqs = _requests(cfg, 3, seed=13, max_new=3)
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run_until_idle()
+        finished = [r for r in done if r.status == "done"]
+        assert all(len(r.generated) == r.max_new_tokens for r in finished)
+        assert any(r.retries > 0 for r in finished)
+
+
+class TestLivelockGuard:
+    def test_eos_free_request_raises_instead_of_spinning(self, model_setup):
+        """Regression: an EOS-free request with max_new_tokens beyond the
+        step budget used to silently truncate; now the guard names it."""
+        cfg, params = model_setup
+        eng = Engine(cfg, params, ServeConfig(n_slots=1, max_len=64))
+        eng.submit(Request(prompt=np.arange(5, dtype=np.int32),
+                           max_new_tokens=10**6, name="runaway"))
+        with pytest.raises(RuntimeError, match="runaway"):
+            eng.run_until_idle(max_steps=5)
+
+    def test_wall_clock_budget(self, model_setup):
+        cfg, params = model_setup
+        eng = Engine(cfg, params, ServeConfig(n_slots=1, max_len=64))
+        eng.submit(Request(prompt=np.arange(5, dtype=np.int32),
+                           max_new_tokens=10**6, name="slowpoke"))
+        with pytest.raises(RuntimeError, match="slowpoke"):
+            eng.run_until_idle(deadline_s=0.0)
