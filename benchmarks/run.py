@@ -87,10 +87,10 @@ def main() -> None:
     results.append(("fig5", fig5_deepbench.run(False)["ok"]))
     if args.with_hlo:
         results.append(("fig5_hlo", fig5_deepbench.run(True)["ok"]))
-    print("\n=== Serving: per-stream observability ===")
+    print("\n=== Serving: observability, saturation SLOs, batching speedup ===")
     from . import serving
 
-    results.append(("serving", serving.run()["ok"]))
+    section("serving", serving.run())
 
     if os.path.isdir(args.artifacts) and os.listdir(args.artifacts):
         print("\n=== Roofline (from dry-run artifacts) ===")

@@ -43,6 +43,7 @@ def main() -> None:
             prompt=rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32),
             max_new_tokens=gen,
             name=f"req{i}",
+            tenant="online" if i % 2 == 0 else "batch",
         )
         reqs.append(r)
         eng.submit(r)
@@ -67,6 +68,15 @@ def main() -> None:
     legacy_total = sum(int(v["kv_bytes"]) for v in report.values())
     print(f"invariant Σ per-stream (legacy accessors) == aggregate (frame): "
           f"{legacy_total == total}")
+
+    # tenant is a first-class frame axis (DESIGN.md §5.12): KV demand and the
+    # SLO lanes (TTFT/latency/tokens) roll up per tenant with one groupby.
+    print("\nper-tenant rollup (frame.groupby('tenant')):")
+    for tenant, sub in sorted(eng.frame.groupby("tenant").frames().items()):
+        kv = sub.filter(access_type="KV_ACC_W").sum()
+        toks = sub.filter(access_type="SLO", outcome="TOKENS_OUT").sum()
+        print(f"  {tenant:6s} requests={len(sub.streams()):2d} "
+              f"kv_bytes={int(kv):8d} tokens_out={int(toks):4d}")
 
 
 if __name__ == "__main__":

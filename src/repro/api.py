@@ -83,6 +83,10 @@ __all__ = [
     "ServeEngine",
     "ServeConfig",
     "ServeRequest",
+    "LoadSpec",
+    "TenantSpec",
+    "generate_load",
+    "replay_load",
 ]
 
 #: jax-backed re-exports, resolved on first attribute access (PEP 562) so
@@ -93,6 +97,10 @@ _LAZY = {
     "ServeEngine": ("repro.serve.engine", "Engine"),
     "ServeConfig": ("repro.serve.engine", "ServeConfig"),
     "ServeRequest": ("repro.serve.engine", "Request"),
+    "LoadSpec": ("repro.serve.loadgen", "LoadSpec"),
+    "TenantSpec": ("repro.serve.loadgen", "TenantSpec"),
+    "generate_load": ("repro.serve.loadgen", "generate_load"),
+    "replay_load": ("repro.serve.loadgen", "replay_load"),
 }
 
 

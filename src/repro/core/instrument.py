@@ -102,12 +102,23 @@ class StreamStats:
     live telemetry and simulator output share one report format, and a
     :class:`KernelTimeline` in nanoseconds so the paper's §3.2 per-kernel
     launch/exit tracking exists on the real runtime too.
+
+    **Bounded memory** (docs/DESIGN.md §5.12): a long-running engine calls
+    :meth:`retire_stream` when a stream's work is finished, which folds that
+    stream's :class:`StepRecord` list into a small per-stream aggregate (and
+    drops its timeline intervals).  :meth:`summary` / :meth:`streams` /
+    :meth:`reports` answer identically before and after the fold — proven
+    by an equality test — so the live state is O(live streams' records)
+    plus one constant-size aggregate per retired stream, instead of one
+    record per step per request forever.
     """
 
     def __init__(self) -> None:
         self.table = StatTable(name="Runtime_stats")
         self.timeline = KernelTimeline()
         self.records: List[StepRecord] = []
+        #: stream id → folded sums of its retired records (see retire_stream)
+        self._agg: Dict[int, Dict[str, float]] = {}
         self._uid = 0
         self._open: Dict[int, StepRecord] = {}
         self._lock = threading.Lock()
@@ -158,26 +169,72 @@ class StreamStats:
         finally:
             self.step_end(uid, **end_kwargs)
 
+    # -- retirement (bounded memory) ----------------------------------------------
+    def retire_stream(self, stream_id: int, *, drop_timeline: bool = True) -> int:
+        """Fold every record of one finished stream into its per-stream
+        aggregate and forget the records (plus, by default, the stream's
+        timeline intervals).  Returns the number of records folded.
+
+        Summaries are unchanged by construction: the fold computes exactly
+        the sums :meth:`summary` would have computed over the same records
+        in the same order, so ``summary(sid)`` before and after the fold is
+        equal, float-for-float.  Call this once a stream can receive no more
+        steps — e.g. the serving engine calls it when a request retires —
+        and a million-request run holds one record per *live* step plus one
+        small dict per retired stream, instead of every step ever."""
+        with self._lock:
+            mine = [r for r in self.records if r.stream_id == stream_id]
+            if mine:
+                self.records = [r for r in self.records if r.stream_id != stream_id]
+            agg = self._agg.get(stream_id)
+            if agg is None:
+                agg = self._agg[stream_id] = {
+                    "steps": 0, "seconds": 0.0, "tokens": 0, "flops": 0.0,
+                    "hbm_bytes": 0.0, "collective_bytes": 0.0,
+                }
+            if mine:
+                agg["steps"] += len(mine)
+                agg["seconds"] += sum(r.seconds for r in mine)
+                agg["tokens"] += sum(r.tokens for r in mine)
+                agg["flops"] += sum(r.cost.flops for r in mine)
+                agg["hbm_bytes"] += sum(r.cost.hbm_bytes for r in mine)
+                agg["collective_bytes"] += sum(r.cost.collective_bytes for r in mine)
+        if drop_timeline:
+            self.timeline.drop_stream(stream_id)
+        return len(mine)
+
     # -- per-stream summaries -----------------------------------------------------
     def streams(self) -> Tuple[int, ...]:
-        return tuple(sorted({r.stream_id for r in self.records}))
+        return tuple(sorted(set(self._agg) | {r.stream_id for r in self.records}))
 
     def summary(self, stream_id: int) -> Dict[str, float]:
         rs = [r for r in self.records if r.stream_id == stream_id]
-        if not rs:
+        agg = self._agg.get(stream_id)
+        if not rs and agg is None:
             return {"steps": 0}
-        secs = sum(r.seconds for r in rs)
-        toks = sum(r.tokens for r in rs)
-        flops = sum(r.cost.flops for r in rs)
+        steps = (agg["steps"] if agg else 0) + len(rs)
+        if steps == 0:
+            return {"steps": 0}
+        secs = agg["seconds"] if agg else 0.0
+        toks = agg["tokens"] if agg else 0
+        flops = agg["flops"] if agg else 0.0
+        hbm = agg["hbm_bytes"] if agg else 0.0
+        coll = agg["collective_bytes"] if agg else 0.0
+        if rs:
+            secs += sum(r.seconds for r in rs)
+            toks += sum(r.tokens for r in rs)
+            flops += sum(r.cost.flops for r in rs)
+            hbm += sum(r.cost.hbm_bytes for r in rs)
+            coll += sum(r.cost.collective_bytes for r in rs)
         return {
-            "steps": len(rs),
+            "steps": steps,
             "seconds": secs,
             "tokens": toks,
             "tokens_per_s": toks / secs if secs > 0 else 0.0,
             "flops": flops,
             "flops_per_s": flops / secs if secs > 0 else 0.0,
-            "hbm_bytes": sum(r.cost.hbm_bytes for r in rs),
-            "collective_bytes": sum(r.cost.collective_bytes for r in rs),
+            "hbm_bytes": hbm,
+            "collective_bytes": coll,
         }
 
     def frame(self) -> StatsFrame:

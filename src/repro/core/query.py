@@ -74,7 +74,7 @@ _VIEWS: Dict[str, Tuple[bool, Optional[int]]] = {
 }
 
 #: groupby/pivot axis names
-_AXES = ("stream", "access_type", "outcome", "kernel")
+_AXES = ("stream", "access_type", "outcome", "kernel", "tenant")
 
 
 class QueryError(ValueError):
@@ -137,7 +137,7 @@ class StatsFrame:
     (``streams()`` / ``stream_matrix()`` — read per stream, no dense block).
     """
 
-    __slots__ = ("_src", "_timeline", "_names", "_ids", "_events",
+    __slots__ = ("_src", "_timeline", "_names", "_ids", "_tenants", "_events",
                  "_view", "_streams", "_types", "_outcomes", "_window")
 
     def __init__(
@@ -146,6 +146,7 @@ class StatsFrame:
         *,
         timeline: Optional[KernelTimeline] = None,
         names: Optional[Mapping[str, int]] = None,
+        tenants: Optional[Mapping[int, str]] = None,
         events: Optional[EventJournal] = None,
         view: str = "tip",
     ) -> None:
@@ -155,6 +156,9 @@ class StatsFrame:
         self._timeline = timeline
         self._names: Dict[str, int] = dict(names or {})
         self._ids: Dict[int, str] = {sid: n for n, sid in self._names.items()}
+        #: stream id → tenant label (the serving engine's per-tenant
+        #: attribution; see docs/DESIGN.md §5.12)
+        self._tenants: Dict[int, str] = dict(tenants or {})
         self._events = events if events is not None else (
             source if isinstance(source, EventJournal) else None
         )
@@ -177,6 +181,7 @@ class StatsFrame:
         new._timeline = self._timeline
         new._names = self._names
         new._ids = self._ids
+        new._tenants = self._tenants
         new._events = self._events
         new._view = self._view if view is unset else view
         new._streams = self._streams if streams is unset else streams
@@ -202,6 +207,18 @@ class StatsFrame:
     def stream_label(self, sid: int) -> Union[int, str]:
         """The stream's name when one is known, else its id."""
         return self._ids.get(sid, sid)
+
+    def tenant_label(self, sid: int) -> str:
+        """The tenant owning a stream (``""`` when unattributed)."""
+        return self._tenants.get(sid, "")
+
+    def _tenant_streams(self, tenant: str) -> Tuple[int, ...]:
+        ids = tuple(sid for sid, t in self._tenants.items() if t == tenant)
+        if not ids:
+            raise QueryError(
+                f"unknown tenant {tenant!r}; known: {sorted(set(self._tenants.values()))}"
+            )
+        return ids
 
     def _resolve_type(self, t) -> int:
         if isinstance(t, str):
@@ -244,14 +261,17 @@ class StatsFrame:
         self,
         *,
         stream=None,
+        tenant=None,
         access_type=None,
         outcome=None,
         view: Optional[str] = None,
     ) -> "StatsFrame":
         """A narrowed frame.  Each axis accepts a single value or a sequence;
-        successive filters intersect.  ``view`` switches the stat store —
-        switching to/from a fail view drops the outcome filter (the outcome
-        axes are different enums)."""
+        successive filters intersect.  ``tenant`` selects every stream the
+        frame's tenant map attributes to that tenant (serving engines build
+        their frames with the map; see :attr:`repro.serve.engine.Engine.frame`).
+        ``view`` switches the stat store — switching to/from a fail view
+        drops the outcome filter (the outcome axes are different enums)."""
         f = self
         if view is not None:
             if view not in _VIEWS:
@@ -265,6 +285,15 @@ class StatsFrame:
             is_fail = view in ("fail", "clean_fail")
             outcomes = None if was_fail != is_fail else f._outcomes
             f = f._derive(view=view, outcomes=outcomes)
+        if tenant is not None:
+            if not _VIEWS[f._view][0]:
+                raise QueryError(f"view {f._view!r} has no stream axis")
+            ids: Tuple[int, ...] = ()
+            for t in _as_tuple(tenant):
+                ids += f._tenant_streams(t)
+            if f._streams is not None:
+                ids = self._intersect(f._streams, ids)
+            f = f._derive(streams=ids)
         if stream is not None:
             if not _VIEWS[f._view][0]:
                 raise QueryError(f"view {f._view!r} has no stream axis")
@@ -602,8 +631,9 @@ class StatsFrame:
         failures retry, so they are excluded (see ``repro.sim.scenarios``).
         ``PREFETCH_ISSUED`` sums the :data:`AccessType.PREFETCH` traffic
         row, which is excluded from every demand key; the fault-injection
-        bookkeeping row (:data:`AccessType.FAULT`, docs/DESIGN.md §5.11) is
-        likewise excluded — its five lanes surface under their own keys and
+        bookkeeping row (:data:`AccessType.FAULT`, docs/DESIGN.md §5.11) and
+        the serve-layer SLO row (:data:`AccessType.SLO`, §5.12) are likewise
+        excluded — fault lanes surface under their own keys and
         never perturb ``TOTAL``.  Only meaningful on an access-outcome axis:
         fail views (whose columns are ``FailOutcome`` reasons) are
         rejected."""
@@ -631,6 +661,10 @@ class StatsFrame:
         fault_row = int(AccessType.FAULT)
         if fault_row < m.shape[0]:
             demand[fault_row] = False
+        # the serve-layer SLO row counts microseconds/tokens, never accesses
+        slo_row = int(AccessType.SLO)
+        if slo_row < m.shape[0]:
+            demand[slo_row] = False
         got = {
             "HIT": int(col(AccessOutcome.HIT)[demand].sum()),
             "MSHR_HIT": int(col(AccessOutcome.HIT_RESERVED)[demand].sum()),
@@ -659,7 +693,9 @@ class StatsFrame:
     def groupby(self, key: str) -> "FrameGroupBy":
         """Group by ``"stream"`` / ``"access_type"`` / ``"outcome"`` /
         ``"kernel"`` (kernel grouping = each kernel's own stream over its
-        timeline window; needs a timeline + events)."""
+        timeline window; needs a timeline + events) / ``"tenant"`` (streams
+        rolled up by the frame's tenant map; unattributed streams group
+        under ``""``)."""
         if key not in _AXES:
             raise QueryError(f"unknown groupby key {key!r}; expected one of {_AXES}")
         return FrameGroupBy(self, key)
@@ -753,6 +789,14 @@ class FrameGroupBy:
         if self._key == "stream":
             for sid in f.streams():
                 out[f.stream_label(sid)] = f.filter(stream=sid)
+        elif self._key == "tenant":
+            # one sub-frame per tenant over the *present* selected streams,
+            # in first-seen stream order (stable rollup for reports)
+            members: Dict[str, list] = {}
+            for sid in f.streams():
+                members.setdefault(f.tenant_label(sid), []).append(sid)
+            for label, sids in members.items():
+                out[label] = f._derive(streams=tuple(sids))
         elif self._key == "access_type":
             n_t, _ = f._geometry()
             sel = f._types if f._types is not None else range(n_t)

@@ -84,6 +84,13 @@ class AccessType(enum.IntEnum):
     #: the fault outcome columns below — like PREFETCH, this row is not
     #: demand traffic and demand-side views exclude it
     FAULT = 9
+    #: serve-layer SLO observability (docs/DESIGN.md §5.12): per-request
+    #: latency/throughput quantities recorded once per request lifecycle
+    #: event on the request's stream (``TTFT_US`` at prefill completion,
+    #: ``LATENCY_US`` + ``TOKENS_OUT`` at retirement).  Counts on this row
+    #: are microseconds/tokens, not accesses — like PREFETCH and FAULT it is
+    #: excluded from every demand-side view
+    SLO = 10
 
     @classmethod
     def count(cls) -> int:
@@ -131,6 +138,20 @@ class AccessOutcome(enum.IntEnum):
                       ended / stall burst drained / abort armed after the
                       kernel already finished; retried request or pool job
                       that ultimately succeeded)
+
+    Serve-layer SLO outcomes (recorded on the :data:`AccessType.SLO` row by
+    :class:`repro.serve.engine.Engine`, see docs/DESIGN.md §5.12) — counts
+    are quantities, not accesses, so per-tenant SLO rollups are plain
+    :class:`~repro.core.query.StatsFrame` queries:
+
+    TTFT_US         — time-to-first-token in microseconds, recorded once
+                      when a request's prefill completes (its first token)
+    LATENCY_US      — request latency in microseconds (submit → terminal
+                      disposition), recorded once at retirement for every
+                      terminal status
+    TOKENS_OUT      — generated tokens, recorded once at retirement for
+                      successfully completed (``status == "done"``) requests
+                      only, so per-tenant goodput is this column's sum
     """
 
     HIT = 0
@@ -146,6 +167,9 @@ class AccessOutcome(enum.IntEnum):
     TIMEOUT_EXPIRED = 10
     SHED = 11
     RECOVERED = 12
+    TTFT_US = 13
+    LATENCY_US = 14
+    TOKENS_OUT = 15
 
     @classmethod
     def count(cls) -> int:
@@ -167,6 +191,9 @@ _OUTCOME_NAMES = {
     AccessOutcome.TIMEOUT_EXPIRED: "TIMEOUT_EXPIRED",
     AccessOutcome.SHED: "SHED",
     AccessOutcome.RECOVERED: "RECOVERED",
+    AccessOutcome.TTFT_US: "TTFT_US",
+    AccessOutcome.LATENCY_US: "LATENCY_US",
+    AccessOutcome.TOKENS_OUT: "TOKENS_OUT",
 }
 
 

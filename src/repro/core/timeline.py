@@ -71,6 +71,14 @@ class KernelTimeline:
         self.last_streamID = stream_id
         self.last_uid = uid
 
+    def drop_stream(self, stream_id: int) -> int:
+        """Forget every interval recorded for one stream (long-running
+        engines drop retired request streams so the timeline stays O(live);
+        see :meth:`repro.core.instrument.StreamStats.retire_stream`).
+        Returns how many intervals were dropped."""
+        per = self.gpu_kernel_time.pop(stream_id, None)
+        return 0 if per is None else len(per)
+
     # -- queries ---------------------------------------------------------------
     def get(self, stream_id: int, uid: int) -> KernelTime:
         return self.gpu_kernel_time[stream_id][uid]

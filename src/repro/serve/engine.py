@@ -1,24 +1,44 @@
-"""Multi-stream serving engine: slot-based continuous batching with
-per-stream statistics — the paper's feature where it matters in production.
+"""Multi-stream serving front-end: continuous batching with per-stream and
+per-tenant statistics — the paper's feature where it matters in production.
 
 Every client request is a :class:`repro.core.Stream`.  The engine keeps a
 fixed decode batch of ``n_slots``; each slot is bound to (at most) one
-request stream.  Scheduling per step:
+request stream.  Scheduling per step (docs/DESIGN.md §5.12):
 
-1. admit queued requests into free slots (prefill, cache transplant),
-2. one batched ``decode_step`` advances every active slot,
+1. release expired backoffs, expire deadlines, admit queued requests into
+   free slots (prefill, cache transplant) — admits happen *between* decode
+   steps without draining the batch (continuous batching),
+2. one batched ``decode_step`` advances every active slot; when
+   ``batch_buckets`` are configured the decode runs at the smallest bucket
+   covering the active slots (padding/unpadding is a pure slice/write-back,
+   so per-request greedy results are unchanged by the bucket choice),
 3. finished slots (EOS / max_tokens) retire → their stream's stats print
    (the paper's print-on-kernel-exit, §3.1) and the slot frees.
 
-Per-stream attribution (``StreamStats`` + ``StatTable``):
+Admission control: ``ServeConfig.max_live`` caps admitted work (queue +
+active slots) the way saxml caps live batches — overflow sheds the
+lowest-priority/latest entry through the same lanes as queue-limit faults —
+and ``max_admits_per_step`` bounds prefills per engine step so a burst
+cannot starve the decode cadence.
+
+Per-stream / per-tenant attribution (``StreamStats`` + ``StatTable``):
   * prefill / decode wall-time per request stream,
   * tokens in/out per stream,
   * KV-cache bytes written per stream (KV_ACC_W rows),
+  * SLO lanes (``AccessType.SLO`` row): TTFT_US at first token, LATENCY_US
+    and TOKENS_OUT at retirement — so TTFT, per-token latency, goodput and
+    shed/timeout rates are all StatsFrame queries, rolled up per tenant via
+    ``frame.groupby("tenant")``,
   * per-step kernel timeline (§3.2 ``gpu_kernel_time`` analog).
+
+Retirement folds the stream's step records into a constant-size aggregate
+(:meth:`StreamStats.retire_stream`), so a long-running engine holds O(live)
+step state no matter how many requests it has served.
 
 Without the stream dimension these numbers are exactly the conflated
 aggregates the paper complains about — see ``benchmarks/serving.py`` for the
-side-by-side.
+side-by-side, and ``serve/loadgen.py`` for the trace-driven multi-tenant
+load generator that exercises all of it under saturation.
 """
 
 from __future__ import annotations
@@ -58,6 +78,9 @@ class Request:
     max_new_tokens: int = 16
     eos_id: int = -1  # -1 → run to max_new_tokens
     name: str = ""
+    #: tenant owning this request; per-tenant SLO rollups are
+    #: ``engine.frame.groupby("tenant")`` queries (docs/DESIGN.md §5.12)
+    tenant: str = ""
     #: admission priority under load shedding (higher = keep longer); ties
     #: shed the latest-submitted first (docs/DESIGN.md §5.11)
     priority: int = 0
@@ -70,6 +93,8 @@ class Request:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     submitted_s: float = 0.0
+    #: submission → first token (set at prefill; mirrored on the SLO lane)
+    ttft_s: float = 0.0
     done: bool = False
     #: retry attempts consumed (shed → backoff → re-enqueue cycles)
     retries: int = 0
@@ -89,12 +114,42 @@ class ServeConfig:
     greedy: bool = True
     temperature: float = 1.0
     sample_seed: int = 0
+    #: sorted decode batch-size buckets (each in ``1..n_slots``; ``n_slots``
+    #: is always implied).  Each decode runs at the smallest bucket covering
+    #: the highest active slot: the cache is sliced to the bucket, decoded,
+    #: and written back, so a partially-full batch does not pay for empty
+    #: slots.  Greedy per-request results are invariant to the bucket choice
+    #: (row-independent decode); categorical sampling draws depend on batch
+    #: shape, so sampled runs are reproducible per config but not across
+    #: bucket configs.  ``()`` → always decode at ``n_slots`` (the pre-bucket
+    #: behavior, bit-for-bit).
+    batch_buckets: Tuple[int, ...] = ()
+    #: admission control (saxml's ``max_live_batches`` analog): caps admitted
+    #: work (queue + active slots); overflow sheds the lowest-priority /
+    #: latest entry through the standard SHED lane (terminal without a fault
+    #: plan, retry+backoff with one).  0 → uncapped.
+    max_live: int = 0
+    #: at most this many prefills per engine step, so an arrival burst
+    #: cannot starve the decode cadence of already-admitted requests.
+    #: 0 → fill every free slot.
+    max_admits_per_step: int = 0
     #: request-layer fault injection (docs/DESIGN.md §5.11): admission-queue
     #: overflow → priority-based load shedding with bounded retry +
     #: exponential backoff + seeded jitter, and per-request step deadlines.
     #: ``None`` (or a plan with ``queue_limit=0`` and ``deadline_steps=0``)
     #: disables every request-layer fault path.
     fault_plan: Optional[FaultPlan] = None
+
+    def __post_init__(self) -> None:
+        for b in self.batch_buckets:
+            if not (1 <= int(b) <= self.n_slots):
+                raise ValueError(
+                    f"batch bucket {b} outside [1, n_slots={self.n_slots}]"
+                )
+        if self.max_live < 0:
+            raise ValueError("max_live must be >= 0 (0 = uncapped)")
+        if self.max_admits_per_step < 0:
+            raise ValueError("max_admits_per_step must be >= 0 (0 = uncapped)")
 
 
 class Engine:
@@ -122,10 +177,31 @@ class Engine:
         self._decode = jax.jit(
             lambda p, c, t, q: decode_step(cfg, p, c, t, q), donate_argnums=(1,)
         )
+        #: sorted decode buckets; n_slots always present so a full batch
+        #: takes the unsliced fast path
+        self._buckets = tuple(sorted(set(map(int, scfg.batch_buckets)) | {scfg.n_slots}))
+        #: per-cache-leaf batch axis (0 for (B,...) leaves, 1 for stacked
+        #: (R, B, ...) superblock leaves) — only needed when slicing
+        self._batch_axes = None
+        if len(self._buckets) > 1:
+            one = init_cache(cfg, 1, scfg.max_len, dtype=cfg.compute_jdtype())
+            self._batch_axes = jax.tree_util.tree_map(
+                lambda big, o: 0
+                if (big.ndim == o.ndim and big.shape[0] != o.shape[0] and o.shape[0] == 1)
+                else 1,
+                self.cache,
+                one,
+            )
         self._kv_bytes_per_token = self._estimate_kv_bytes_per_token()
         self._rng = jax.random.PRNGKey(scfg.sample_seed)
         self._retired: List[Request] = []
         self._frame_cache: Optional[Tuple[int, StatsFrame]] = None
+        #: stream id → tenant label (feeds StatsFrame tenant queries)
+        self._tenants: Dict[int, str] = {}
+        #: engine-lifetime terminal-status ledger; unlike ``_retired`` it is
+        #: never drained, so ``fault_summary`` stays consistent with the
+        #: cumulative fault lanes (bugfix, docs/DESIGN.md §5.12)
+        self._status_counts: Dict[str, int] = {}
         # request-layer fault injection (docs/DESIGN.md §5.11)
         self._step_count = 0
         self._seq = 0  # submission order; deterministic shed tie-break
@@ -157,6 +233,8 @@ class Engine:
     def submit(self, req: Request) -> int:
         s = self.streams.create_stream(req.name or f"req_{self._seq}")
         req.stream_id = s.stream_id
+        if req.tenant:
+            self._tenants[s.stream_id] = req.tenant
         req.submitted_s = time.perf_counter()
         req._seq = self._seq
         self._seq += 1
@@ -167,41 +245,20 @@ class Engine:
             # Admission control: over capacity, shed the lowest-priority
             # entry (ties: latest submitted) — possibly the new arrival.
             self._enforce_queue_limit(plan)
+        self._enforce_max_live()
         return s.stream_id
 
-    def _shed(self, req: Request, plan: FaultPlan) -> None:
+    def _shed(self, req: Request, plan: Optional[FaultPlan]) -> None:
         """One shed event (lane ``SHED``): into backoff while the retry
-        budget lasts, else terminal."""
+        budget lasts, else terminal.  With no fault plan the shed is always
+        terminal (there is no retry machinery to re-enqueue through)."""
         self.table.inc_stats(AccessType.FAULT, AccessOutcome.SHED, req.stream_id, 1)
-        if req.retries < plan.max_retries:
+        if plan is not None and req.retries < plan.max_retries:
             req._faulted = True
             eligible = self._step_count + plan.backoff_steps(req.retries, req.stream_id)
             heapq.heappush(self._backoff, (eligible, req._seq, req))
         else:
-            self._terminate(req, "shed", "request_shed")
-
-    def _terminate(self, req: Request, status: str, event: str) -> None:
-        """Queue-level terminal disposition (never held a slot at the end):
-        emit the stream's report through the normal sink path and retire."""
-        req.done = True
-        req.status = status
-        report = stream_report(
-            self.frame,
-            req.stream_id,
-            source="serve",
-            event=event,
-            cache_name="Serve_stats",
-            fields={
-                "name": req.name,
-                "tokens_out": len(req.generated),
-                "retries": req.retries,
-                "status": status,
-            },
-        )
-        req.exit_report = render_text(report)
-        self._retired.append(req)
-        for sink in self.sinks:
-            sink.emit(report)
+            self._finish(req, "shed", "request_shed")
 
     def cancel(self, req: Request) -> bool:
         """Client cancellation: removes ``req`` wherever it lives (queue,
@@ -220,7 +277,7 @@ class Engine:
         else:
             return False
         self.table.inc_stats(AccessType.FAULT, AccessOutcome.SHED, req.stream_id, 1)
-        self._terminate(req, "cancelled", "request_cancelled")
+        self._finish(req, "cancelled", "request_cancelled")
         return True
 
     def _enforce_queue_limit(self, plan: FaultPlan) -> None:
@@ -229,6 +286,22 @@ class Engine:
         # identity-based removal throughout: Request is a dataclass holding
         # numpy prompts, so == would broadcast instead of comparing requests
         while len(self.queue) > plan.queue_limit:
+            victim = min(self.queue, key=lambda r: (r.priority, -r._seq))
+            self.queue = [r for r in self.queue if r is not victim]
+            self._shed(victim, plan)
+
+    def _enforce_max_live(self) -> None:
+        """``max_live`` admission control: while admitted work (queue +
+        active slots) exceeds the cap, shed the lowest-priority / latest
+        queued entry through the standard SHED machinery.  Active slots are
+        never evicted — admission control gates entry, it does not preempt."""
+        ml = self.scfg.max_live
+        if ml <= 0:
+            return
+        plan = self.scfg.fault_plan
+        while self.queue and len(self.queue) + sum(
+            1 for r in self.slots if r is not None
+        ) > ml:
             victim = min(self.queue, key=lambda r: (r.priority, -r._seq))
             self.queue = [r for r in self.queue if r is not victim]
             self._shed(victim, plan)
@@ -246,6 +319,7 @@ class Engine:
             released = True
         if released:
             self._enforce_queue_limit(plan)
+            self._enforce_max_live()
 
     def _deadline_of(self, req: Request, plan: Optional[FaultPlan]) -> int:
         if req.deadline_steps > 0:
@@ -278,39 +352,108 @@ class Engine:
             self.table.inc_stats(
                 AccessType.FAULT, AccessOutcome.TIMEOUT_EXPIRED, req.stream_id, 1
             )
-            self._terminate(req, "timeout", "request_timeout")
+            self._finish(req, "timeout", "request_timeout")
 
     def _admit(self) -> None:
+        cap = self.scfg.max_admits_per_step
+        admitted = 0
         for slot in range(self.scfg.n_slots):
-            if self.slots[slot] is not None or not self.queue:
+            if self.slots[slot] is not None:
                 continue
-            req = self.queue.pop(0)
-            t0 = time.perf_counter()
-            uid = self.stats.step_begin("prefill", req.stream_id)
-            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-            logits, small = self._prefill(self.params, {"tokens": tokens})
-            # place this sequence's prompt cache into the batched slot buffers
-            one = init_cache(self.cfg, 1, self.scfg.max_len, dtype=self.cfg.compute_jdtype())
-            one = transplant(one, small)
-            self.cache = jax.tree_util.tree_map(
-                lambda big, o: _write_slot(big, o, slot), self.cache, one
-            )
-            nxt = int(self._select_tokens(logits)[0])
-            plen = len(req.prompt)
-            self.pos[slot] = plen
-            self.last_token[slot] = nxt
-            req.generated.append(nxt)
-            self.slots[slot] = req
-            req.prefill_s = time.perf_counter() - t0
-            self.stats.step_end(uid, tokens=plen)
-            self.table.inc_stats(
-                AccessType.KV_ACC_W, AccessOutcome.MISS, req.stream_id,
-                plen * self._kv_bytes_per_token,
-            )
+            # keep prefilling into this slot until something survives its
+            # own prefill (a request whose first token terminates it retires
+            # immediately and never occupies the slot)
+            while self.queue and self.slots[slot] is None:
+                if cap > 0 and admitted >= cap:
+                    return
+                req = self.queue.pop(0)
+                admitted += 1
+                self._prefill_one(req, slot)
+
+    def _prefill_one(self, req: Request, slot: int) -> None:
+        """Prefill one request and bind it to ``slot`` — unless its prefill
+        token already terminates it (EOS as first token, or
+        ``max_new_tokens == 1``), in which case it retires with exactly the
+        tokens it produced and the slot stays free (bugfix: the old path
+        unconditionally entered decode, so eos-at-prefill decoded anyway and
+        ``max_new_tokens=1`` retired with 2 tokens)."""
+        t0 = time.perf_counter()
+        uid = self.stats.step_begin("prefill", req.stream_id)
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, small = self._prefill(self.params, {"tokens": tokens})
+        nxt = int(self._select_tokens(logits)[0])
+        plen = len(req.prompt)
+        req.generated.append(nxt)
+        req.prefill_s = time.perf_counter() - t0
+        req.ttft_s = time.perf_counter() - req.submitted_s
+        self.stats.step_end(uid, tokens=plen)
+        self.table.inc_stats(
+            AccessType.KV_ACC_W, AccessOutcome.MISS, req.stream_id,
+            plen * self._kv_bytes_per_token,
+        )
+        # SLO lane: submission → first token, µs (clamped to ≥1 so every
+        # prefetched request owns a nonzero TTFT cell — queries count samples
+        # by nonzero cells)
+        self.table.inc_stats(
+            AccessType.SLO, AccessOutcome.TTFT_US, req.stream_id,
+            max(int(req.ttft_s * 1e6), 1),
+        )
+        hit_eos = req.eos_id >= 0 and nxt == req.eos_id
+        if hit_eos or len(req.generated) >= req.max_new_tokens:
+            self._finish(req, "done", "request_done")
+            return
+        # place this sequence's prompt cache into the batched slot buffers
+        one = init_cache(self.cfg, 1, self.scfg.max_len, dtype=self.cfg.compute_jdtype())
+        one = transplant(one, small)
+        self.cache = jax.tree_util.tree_map(
+            lambda big, o: _write_slot(big, o, slot), self.cache, one
+        )
+        self.pos[slot] = plen
+        self.last_token[slot] = nxt
+        self.slots[slot] = req
 
     # ------------------------------------------------------------------ decode
     def _active(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is not None]
+
+    def _bucket_for(self, need: int) -> int:
+        """Smallest configured bucket covering slots ``0..need-1``
+        (``n_slots`` is always a member, so this always resolves)."""
+        for b in self._buckets:
+            if b >= need:
+                return b
+        return self.scfg.n_slots
+
+    def _decode_active(self, active: List[int]):
+        """One decode step over the smallest bucket covering the active
+        slots.  ``bucket == n_slots`` is the literal unsliced path (the
+        pre-bucket behavior, bit-for-bit); a smaller bucket slices the cache
+        leaves down to the bucket, decodes, and writes the advanced rows
+        back.  Decode is row-independent, so active rows see identical math
+        either way."""
+        bucket = self._bucket_for(max(active) + 1)
+        if bucket == self.scfg.n_slots:
+            tokens = jnp.asarray(self.last_token)
+            pos = jnp.asarray(self.pos)
+            logits, self.cache = self._decode(self.params, self.cache, tokens, pos)
+            return logits
+        tokens = jnp.asarray(self.last_token[:bucket])
+        pos = jnp.asarray(self.pos[:bucket])
+        small = jax.tree_util.tree_map(
+            lambda leaf, ax: jax.lax.slice_in_dim(leaf, 0, bucket, axis=ax),
+            self.cache,
+            self._batch_axes,
+        )
+        logits, small = self._decode(self.params, small, tokens, pos)
+        self.cache = jax.tree_util.tree_map(
+            lambda big, s, ax: jax.lax.dynamic_update_slice_in_dim(
+                big, s.astype(big.dtype), 0, axis=ax
+            ),
+            self.cache,
+            small,
+            self._batch_axes,
+        )
+        return logits
 
     def step(self) -> int:
         """One engine iteration.  Returns #active slots advanced."""
@@ -329,10 +472,7 @@ class Engine:
             return 0
         t0 = time.perf_counter()
         uids = {i: self.stats.step_begin("decode", self.slots[i].stream_id) for i in active}
-        tokens = jnp.asarray(self.last_token)
-        pos = jnp.asarray(self.pos)
-        logits, self.cache = self._decode(self.params, self.cache, tokens, pos)
-        nxt = self._select_tokens(logits)
+        nxt = self._select_tokens(self._decode_active(active))
         dt = time.perf_counter() - t0
         # One vectorized ingest for the whole decode batch: every active
         # slot wrote one token's KV bytes on its own stream this step.
@@ -355,38 +495,62 @@ class Engine:
             self.last_token[i] = nxt[i]
             hit_eos = req.eos_id >= 0 and int(nxt[i]) == req.eos_id
             if hit_eos or len(req.generated) >= req.max_new_tokens or self.pos[i] >= self.scfg.max_len - 1:
-                req.done = True
-                self._retire(i)
+                self.slots[i] = None
+                self._finish(req, "done", "request_done")
         return len(active)
 
-    def _retire(self, slot: int) -> None:
-        req = self.slots[slot]
-        self.slots[slot] = None
-        req.status = "done"
-        if req._faulted:
-            # completed despite shedding/backoff: graceful degradation worked
-            self.table.inc_stats(
-                AccessType.FAULT, AccessOutcome.RECOVERED, req.stream_id, 1
-            )
-        # paper §3.1: on exit, report only this stream's stats — a StatsFrame
-        # selection through the same sink code path as the simulator's
-        # kernel-exit and the trainer's summary.
+    def _finish(self, req: Request, status: str, event: str) -> None:
+        """The one terminal path every disposition funnels through (done /
+        timeout / shed / cancelled, whether the request held a slot or not):
+
+        * SLO lanes: LATENCY_US (submission → terminal, µs, clamped ≥1 so
+          every terminal owns a nonzero cell) always; TOKENS_OUT and — for
+          recovered requests — the RECOVERED lane only on ``"done"``,
+        * the engine-lifetime ``_status_counts`` ledger (never drained),
+        * paper §3.1: on exit, report only this stream's stats — a
+          StatsFrame selection through the same sink code path as the
+          simulator's kernel-exit and the trainer's summary,
+        * bounded memory: fold this stream's step records into its
+          aggregate (:meth:`StreamStats.retire_stream`).
+        """
+        req.done = True
+        req.status = status
+        sid = req.stream_id
+        self.table.inc_stats(
+            AccessType.SLO, AccessOutcome.LATENCY_US, sid,
+            max(int((time.perf_counter() - req.submitted_s) * 1e6), 1),
+        )
+        if status == "done":
+            if req.generated:
+                self.table.inc_stats(
+                    AccessType.SLO, AccessOutcome.TOKENS_OUT, sid, len(req.generated)
+                )
+            if req._faulted:
+                # completed despite shedding/backoff: graceful degradation worked
+                self.table.inc_stats(
+                    AccessType.FAULT, AccessOutcome.RECOVERED, sid, 1
+                )
+        self._status_counts[status] = self._status_counts.get(status, 0) + 1
+        fields: Dict[str, Any] = {
+            "name": req.name,
+            "tokens_out": len(req.generated),
+            "prefill_s": req.prefill_s,
+            "decode_s": req.decode_s,
+            "retries": req.retries,
+            "status": status,
+        }
+        if req.tenant:
+            fields["tenant"] = req.tenant
         report = stream_report(
             self.frame,
-            req.stream_id,
+            sid,
             source="serve",
-            event="request_done",
+            event=event,
             cache_name="Serve_stats",
-            fields={
-                "name": req.name,
-                "tokens_out": len(req.generated),
-                "prefill_s": req.prefill_s,
-                "decode_s": req.decode_s,
-                "retries": req.retries,
-                "status": req.status,
-            },
+            fields=fields,
         )
         req.exit_report = render_text(report)
+        self.stats.retire_stream(sid)
         self._retired.append(req)
         for sink in self.sinks:
             sink.emit(report)
@@ -436,20 +600,21 @@ class Engine:
         return done
 
     def fault_summary(self) -> Dict[str, object]:
-        """Snapshot of the fault subsystem: per-lane engine-wide counts,
-        terminal statuses of retired requests, and how many requests are
-        currently waiting out a backoff window."""
+        """Snapshot of the fault subsystem.  Both halves are
+        **engine-lifetime totals**: ``lanes`` reads the cumulative fault
+        rows of the stat table, and ``statuses`` reads the cumulative
+        terminal-status ledger — neither is affected by
+        :meth:`drain_retired` (bugfix: statuses used to be recomputed from
+        the un-drained ``_retired`` buffer, so a drain silently zeroed
+        them while the lanes kept counting)."""
         frame = self.frame.filter(access_type=AccessType.FAULT)
         lanes = {
             lane: int(frame.filter(outcome=getattr(AccessOutcome, lane)).sum())
             for lane in FAULT_LANES
         }
-        statuses: Dict[str, int] = {}
-        for req in self._retired:
-            statuses[req.status] = statuses.get(req.status, 0) + 1
         return {
             "lanes": lanes,
-            "statuses": statuses,
+            "statuses": dict(self._status_counts),
             "pending_backoff": len(self._backoff),
         }
 
@@ -458,16 +623,21 @@ class Engine:
     def frame(self) -> StatsFrame:
         """The engine's per-stream byte table as a query frame; request
         streams resolve by their submitted names
-        (``eng.frame.filter(stream="req3", access_type="KV_ACC_W").sum()``).
-        Cached until a new stream appears — ``_retire`` reads it per
-        finished request, and rebuilding the name maps there would make
-        retirement O(total requests)."""
+        (``eng.frame.filter(stream="req3", access_type="KV_ACC_W").sum()``)
+        and tenants by label
+        (``eng.frame.filter(tenant="batch").sum()``,
+        ``eng.frame.groupby("tenant")``).  Cached until a new stream appears
+        — ``_finish`` reads it per finished request, and rebuilding the name
+        maps there would make retirement O(total requests)."""
         n = len(self.streams._streams)
         if self._frame_cache is None or self._frame_cache[0] != n:
             names = {
                 s.name: sid for sid, s in self.streams._streams.items() if s.name
             }
-            self._frame_cache = (n, StatsFrame(self.table, names=names))
+            self._frame_cache = (
+                n,
+                StatsFrame(self.table, names=names, tenants=dict(self._tenants)),
+            )
         return self._frame_cache[1]
 
     def per_stream_report(self) -> Dict[int, Dict[str, float]]:

@@ -25,9 +25,10 @@ API_SURFACE = {
     ],
     "repro.api": [
         "Access", "BatchJob", "BatchResult", "EventJournal", "KernelDesc",
-        "Launch", "QueryError", "RunResult", "ServeConfig", "ServeEngine",
-        "ServeRequest", "Session", "SimConfig", "StatsFrame", "TrainConfig",
-        "Trainer", "build_scenario", "list_scenarios", "make_sink",
+        "Launch", "LoadSpec", "QueryError", "RunResult", "ServeConfig",
+        "ServeEngine", "ServeRequest", "Session", "SimConfig", "StatsFrame",
+        "TenantSpec", "TrainConfig", "Trainer", "build_scenario",
+        "generate_load", "list_scenarios", "make_sink", "replay_load",
         "simulate", "sweep",
     ],
     "repro.core": [

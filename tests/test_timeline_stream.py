@@ -109,3 +109,71 @@ class TestCollector:
         merged = StatCollector.combine(snaps)
         assert merged.streams() == (5,)
         assert merged.get(AccessType.ICI_SND, AccessOutcome.MISS, 5) == 20
+
+
+class TestStreamStatsRetire:
+    """Bounded-memory fold (docs/DESIGN.md §5.12): retiring a stream folds
+    its StepRecords into a constant-size aggregate without changing any
+    summary — float-for-float."""
+
+    def _stats_with(self, streams=(1, 2), steps=3):
+        from repro.core.instrument import StepCost, StreamStats
+
+        st = StreamStats()
+        for sid in streams:
+            for k in range(steps):
+                uid = st.step_begin(f"s{k}", sid)
+                st.step_end(
+                    uid,
+                    tokens=2 + k,
+                    cost=StepCost(flops=1e6 + k, hbm_bytes=512.5, collective_bytes=64.0),
+                )
+        return st
+
+    def test_fold_preserves_summary_exactly(self):
+        st = self._stats_with()
+        before = {sid: st.summary(sid) for sid in st.streams()}
+        assert st.retire_stream(1) == 3
+        assert st.summary(1) == before[1]  # retired: agg only
+        assert st.summary(2) == before[2]  # live: records only
+        assert st.streams() == (1, 2)
+
+    def test_fold_drops_records_and_timeline(self):
+        st = self._stats_with()
+        assert any(r.stream_id == 1 for r in st.records)
+        assert 1 in st.timeline.gpu_kernel_time
+        st.retire_stream(1)
+        assert not any(r.stream_id == 1 for r in st.records)
+        assert 1 not in st.timeline.gpu_kernel_time
+        assert 2 in st.timeline.gpu_kernel_time  # other streams untouched
+        assert st.retire_stream(1) == 0  # idempotent
+
+    def test_late_records_fold_into_existing_aggregate(self):
+        st = self._stats_with(streams=(7,), steps=2)
+        st.retire_stream(7)
+        uid = st.step_begin("late", 7)
+        st.step_end(uid, tokens=5)
+        combined = st.summary(7)
+        assert combined["steps"] == 3 and combined["tokens"] == 2 + 3 + 5
+        st.retire_stream(7)  # second fold absorbs the late record
+        assert st.summary(7) == combined
+
+    def test_unknown_stream_reports_zero(self):
+        from repro.core.instrument import StreamStats
+
+        st = StreamStats()
+        assert st.summary(99) == {"steps": 0}
+        assert st.retire_stream(99) == 0
+        assert st.summary(99) == {"steps": 0}
+
+    def test_reports_identical_across_fold(self):
+        import io
+
+        st = self._stats_with()
+        before = io.StringIO()
+        st.print_summary(before)
+        st.retire_stream(1)
+        st.retire_stream(2)
+        after = io.StringIO()
+        st.print_summary(after)
+        assert before.getvalue() == after.getvalue()
