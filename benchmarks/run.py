@@ -27,6 +27,7 @@ def main() -> None:
     # fig5's compiled-HLO tier) loads jax and its thread pools.
     from . import (
         batch_speed,
+        divergent_sweep,
         fault_overhead,
         fig2_l2lat,
         fig34_mixed,
@@ -71,6 +72,8 @@ def main() -> None:
     section("sim_compiled", sim_compiled.run(quick=True))
     print("\n=== Batch runner: pooled scenario sweep vs serial fallback ===")
     section("batch_speed", batch_speed.run(quick=True))
+    print("\n=== Batch runner: batched divergent sweep vs serial reference ===")
+    section("divergent", divergent_sweep.run(quick=True))
     print("\n=== Miss-path mechanisms: vector sweep vs serial, per mechanism ===")
     section("mechanism", mechanism_sweep.run(quick=True))
     print("\n=== Fault injection: armed-but-idle overhead + off-path identity ===")

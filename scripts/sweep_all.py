@@ -8,7 +8,10 @@ Two modes:
   cross-checked bit-identical and every per-stream oracle verified inline.
   ``--backend vector`` swaps per-job simulation for shape-grouped
   trace-compile/replay (each distinct shape simulates once; the serial
-  cross-check still re-simulates every job).  Writes
+  cross-check still re-simulates every job); ``--backend batched`` runs
+  every job in one process with deferred per-kernel landing and a single
+  SoA stat scatter (the divergent-sweep backend — see
+  ``repro/sim/batched.py``).  Writes
   ``artifacts/sweeps/scenarios.json`` (per-job payloads + the merged
   per-stream matrix signature) and prints the merged multi-run report.
 
@@ -129,9 +132,11 @@ def main() -> int:
     ap.add_argument("--mode", choices=("scenarios", "dryrun"), default="scenarios")
     ap.add_argument("--engines", default="cycle,event",
                     help="comma-separated engine list (cycle, event, compiled)")
-    ap.add_argument("--backend", choices=("pool", "vector"), default="pool",
+    ap.add_argument("--backend", choices=("pool", "vector", "batched"), default="pool",
                     help="pool: one simulation per job; vector: compile each "
-                         "scenario shape once and lockstep-replay its jobs")
+                         "scenario shape once and lockstep-replay its jobs; "
+                         "batched: one process advances every (divergent) job "
+                         "with a single SoA stat landing")
     ap.add_argument("--workers", type=int, default=0, help="pool size (default: all cores)")
     ap.add_argument("--no-verify", action="store_true",
                     help="skip the serial cross-check (pooled run only)")

@@ -293,7 +293,9 @@ def sweep(
     carry their own engine/params, so combining them with
     ``scenarios``/``engines``/``params`` is rejected rather than silently
     ignored.  ``backend="vector"`` compiles each scenario shape once and
-    lockstep-replays its jobs; ``parallel=False`` is the bit-identical
+    lockstep-replays its jobs; ``backend="batched"`` advances every
+    (divergent) job in one process with a single SoA stat landing
+    (``repro.sim.batched``); ``parallel=False`` is the bit-identical
     serial fallback."""
     if jobs is None:
         jobs = sweep_jobs(

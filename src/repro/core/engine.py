@@ -42,6 +42,7 @@ from typing import IO, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .array_ops import get_backend
 from .stats import (
     DEFAULT_STREAM,
     AccessOutcome,
@@ -138,6 +139,9 @@ class StatsEngine:
         self._n_outcomes = int(n_outcomes)
         self._n_fail = int(n_fail)
         self._capacity = int(capacity)
+        # Array-ops backend for the landing scatters; the simulator rebinds
+        # this to the configured backend (SimConfig.array_backend).
+        self.ops = get_backend("numpy")
 
         # Columnar staging.  Scalar mutators append to plain Python lists
         # (one per column — list.append is several times cheaper than a NumPy
@@ -324,7 +328,7 @@ class StatsEngine:
 
     # -- flush: the single-scatter landing ------------------------------------------
     def _ensure_slots(self, stream_ids: np.ndarray) -> None:
-        new = stream_ids[~np.isin(stream_ids, self._sorted_ids, assume_unique=True)]
+        new = stream_ids[~self.ops.sorted_membership(stream_ids, self._sorted_ids)]
         if new.size == 0:
             return
         for sid in new.tolist():
@@ -360,7 +364,7 @@ class StatsEngine:
         journal the exact event stream the simulation produced."""
 
     def flush(self) -> None:
-        """Land every buffered event.  One ``np.add.at`` scatter per store."""
+        """Land every buffered event.  One backend scatter per dense store."""
         if self._pos == 0:
             return
         self._seal_scalars()
@@ -390,7 +394,7 @@ class StatsEngine:
             sel = (lane & bit) != 0
             if sel.any():
                 lin = slot[sel] * (n_t * n_cols) + at[sel] * n_cols + col[sel]
-                np.add.at(dense.reshape(-1), lin, cnt[sel])
+                self.ops.scatter_add_u64(dense.reshape(-1), lin, cnt[sel])
 
         for bit, state in ((_LANE_CLEAN, self._clean), (_LANE_CLEAN_FAIL, self._clean_fail)):
             sel = (lane & bit) != 0

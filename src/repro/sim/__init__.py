@@ -15,6 +15,7 @@ from .scenarios import (
     ScenarioInstance,
     ScenarioSpec,
     build,
+    divergent_draws,
     get_spec,
     list_scenarios,
     scenario,
@@ -52,6 +53,7 @@ __all__ = [
     "get_spec",
     "list_scenarios",
     "space_draws",
+    "divergent_draws",
     "value_only_draws",
     "BatchJob",
     "BatchResult",

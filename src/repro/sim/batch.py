@@ -445,6 +445,12 @@ class BatchRunner:
       its jobs replay in lockstep (phase 2).  Cross-shape groups still fan
       out over the pool when ``parallel=True`` — the shape-grouped-sharding
       composition.
+    * ``backend="batched"`` — SoA batched *divergent* simulation: one
+      process advances every job's run with per-kernel reports deferred,
+      then lands all staged stat journals at once through the array-ops
+      segment-scatter kernel and reconstructs the reports in masked
+      lockstep (``repro.sim.batched``).  The backend for sweeps whose
+      draws share no shape, where vector replay cannot amortize anything.
 
     ``run(parallel=False)`` is the serial fallback: same worker bodies, same
     job order, same merge — proven bit-identical to the pooled path (and
@@ -470,10 +476,21 @@ class BatchRunner:
         self.jobs = list(jobs)
         if not self.jobs:
             raise ValueError("BatchRunner needs at least one job")
-        if backend not in ("pool", "vector"):
-            raise ValueError(f"unknown backend {backend!r} (want 'pool' or 'vector')")
-        if backend == "vector" and (fault_plan is not None or journal is not None):
-            raise ValueError("fault_plan/journal require backend='pool'")
+        if backend not in ("pool", "vector", "batched"):
+            raise ValueError(
+                f"unknown backend {backend!r} (want 'pool', 'vector' or 'batched')"
+            )
+        if backend in ("vector", "batched"):
+            # An *empty* plan is bit-identical to no plan (PR 7's fault-off
+            # identity), so it is accepted here; only an armed plan — or a
+            # journal, whose resume semantics are pool bookkeeping — needs
+            # the pool's retry/recovery machinery.
+            armed = fault_plan is not None and not fault_plan.is_empty()
+            if armed or journal is not None:
+                raise ValueError(
+                    f"an armed fault_plan/journal requires backend='pool' "
+                    f"(backend={backend!r} has no worker retry/recovery path)"
+                )
         self.backend = backend
         self.fault_plan = fault_plan
         self.journal = Path(journal) if journal is not None else None
@@ -634,11 +651,20 @@ class BatchRunner:
                 payloads[i] = p
         return payloads  # type: ignore[return-value]
 
+    def _run_batched(self) -> List[Dict[str, object]]:
+        """One process, N divergent runs, SoA landing (repro.sim.batched)."""
+        from .batched import run_batched_jobs
+
+        return run_batched_jobs(self.jobs)
+
     def run(self, parallel: bool = True) -> BatchResult:
         t0 = time.perf_counter()
-        use_pool = parallel and self.workers > 1 and len(self.jobs) > 1
+        use_pool = (parallel and self.workers > 1 and len(self.jobs) > 1
+                    and self.backend != "batched")
         if self.backend == "vector":
             payloads = self._run_vector(use_pool)
+        elif self.backend == "batched":
+            payloads = self._run_batched()
         else:
             payloads = self._run_pool(use_pool)
         merged = merge_payloads(payloads)

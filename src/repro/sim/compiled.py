@@ -348,8 +348,13 @@ def replay_batch(trace: CompiledTrace, configs: Sequence[SimConfig],
         _guard_max_cycles(trace, cfg)
     n = len(configs)
     if trace.n_segments and n:
+        from repro.core.array_ops import get_backend
+
+        ops = get_backend(configs[0].array_backend)
         deltas = np.diff(trace.seg_resources, axis=0, prepend=0.0)
-        lockstep = np.add.accumulate(deltas, axis=0)  # (segments, 9) replay
+        # (segments, 9) replay; the backend running sum is a strict left
+        # fold, element-identical to np.add.accumulate
+        lockstep = np.asarray(ops.running_sum(deltas))
         finals = np.broadcast_to(lockstep[-1][:, None], (9, n))
     else:
         finals = np.zeros((9, n))
@@ -445,6 +450,7 @@ def _restore_cache(cache, state: Tuple) -> None:
     cache._lines.clear()
     for tag, dirty, last_use in lines:
         cache._lines[tag] = _Line(tag, dirty, last_use)
+    cache._tag_snapshot = None  # membership rebuilt wholesale
     cache._mshr = {tag: (rc, list(streams)) for tag, rc, streams in mshr}
     cache._mshr_heap = [tuple(e) for e in heap]  # already heap-ordered
     cache._mshr_seq = itertools.count(seq_next)

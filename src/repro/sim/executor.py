@@ -119,6 +119,12 @@ class SimConfig:
     #: that shape replays the recorded trace — see repro/sim/compiled.py).
     #: Results are bit-identical across all three.
     engine: str = "event"
+    #: array-ops backend for the hottest landing paths (stat-flush scatter,
+    #: bandwidth-pointer running sums, batched cache-tag probe): "numpy"
+    #: (reference) or "jax" (jit/pallas, element-identical — see
+    #: repro/core/array_ops.py).  Value-only: backends are proven
+    #: element-identical, so the event sequence cannot depend on the choice.
+    array_backend: str = "numpy"
     verbose: bool = False
 
     def structural_key(self) -> Tuple:
@@ -137,7 +143,7 @@ class SimConfig:
 
 #: SimConfig fields that never change a completing simulation's event
 #: sequence; a change here invalidates nothing in the compiled-trace cache.
-VALUE_ONLY_CONFIG = frozenset({"max_cycles", "verbose"})
+VALUE_ONLY_CONFIG = frozenset({"max_cycles", "verbose", "array_backend"})
 
 
 _UID_IN_LOG = re.compile(r"uid[ =:]+\d+")
@@ -213,6 +219,9 @@ class _Run:
         "ff_gok",
         "ff_gtag",
         "ff_gend",
+        "ff_gok_np",
+        "ff_gtag_np",
+        "ff_gend_np",
         "ff_g",
     )
 
@@ -254,7 +263,8 @@ class _Run:
         cached = self.desc.ff_cache
         if cached is not None and cached[0] == line_size:
             (_, self.ff_at_np, self.ff_tag_np, self.ff_wr_np,
-             self.ff_gok, self.ff_gtag, self.ff_gend) = cached
+             self.ff_gok, self.ff_gtag, self.ff_gend,
+             self.ff_gok_np, self.ff_gtag_np, self.ff_gend_np) = cached
             self.ff_g = 0
             return
         trace = self.trace or []
@@ -273,13 +283,20 @@ class _Run:
             change[0] = True
             change[1:] = (tag_np[1:] != tag_np[:-1]) | (ok_np[1:] != ok_np[:-1])
         starts = np.flatnonzero(change)
-        self.ff_gok = ok_np[starts].tolist()
-        self.ff_gtag = tag_np[starts].tolist()
-        self.ff_gend = np.append(starts[1:], n).tolist()
+        # Group arrays kept both ways: Python lists for the scalar per-group
+        # scan (cheap indexing) and NumPy for the vectorized residency probe
+        # over long chains (_fast_forward_dep).
+        self.ff_gok_np = ok_np[starts]
+        self.ff_gtag_np = tag_np[starts]
+        self.ff_gend_np = np.append(starts[1:], n)
+        self.ff_gok = self.ff_gok_np.tolist()
+        self.ff_gtag = self.ff_gtag_np.tolist()
+        self.ff_gend = self.ff_gend_np.tolist()
         self.ff_g = 0
         self.desc.ff_cache = (
             line_size, self.ff_at_np, self.ff_tag_np, self.ff_wr_np,
             self.ff_gok, self.ff_gtag, self.ff_gend,
+            self.ff_gok_np, self.ff_gtag_np, self.ff_gend_np,
         )
 
     def drained(self) -> bool:
@@ -291,7 +308,8 @@ class _Run:
         )
 
 
-def _occupy_sequence(bw: Bandwidth, cycles: np.ndarray, nbytes: np.ndarray, wr_mask) -> None:
+def _occupy_sequence(bw: Bandwidth, cycles: np.ndarray, nbytes: np.ndarray, wr_mask,
+                     ops=None) -> None:
     """Apply a sequence of ``bw.occupy(nbytes[i], cycles[i])`` calls with
     **bit-identical** float arithmetic to the scalar loop.
 
@@ -327,7 +345,10 @@ def _occupy_sequence(bw: Bandwidth, cycles: np.ndarray, nbytes: np.ndarray, wr_m
         durs = np.empty(n - i + 1, dtype=np.float64)
         durs[0] = nf
         np.divide(nbytes[i:], bpc, out=durs[1:])
-        nf = float(np.add.accumulate(durs)[-1])
+        if ops is None:
+            nf = float(np.add.accumulate(durs)[-1])
+        else:
+            nf = float(ops.running_sum(durs)[-1])
     bw.next_free_cycle = nf
 
 
@@ -472,6 +493,12 @@ class TPUSimulator:
         sinks: Optional[Sequence[ReportSink]] = None,
     ) -> None:
         self.cfg = config or SimConfig()
+        # Array-ops backend (SimConfig.array_backend): routes the stat-flush
+        # scatter and the bandwidth-pointer running sums.  Element-identical
+        # across backends, so this is value-only config.
+        from repro.core.array_ops import get_backend
+
+        self._ops = get_backend(self.cfg.array_backend)
         self.streams = StreamManager()
         # One engine drives all three stat views (tip / per-window / clean):
         # events buffer in columnar form and land via vectorized scatters.
@@ -482,6 +509,7 @@ class TPUSimulator:
             name="Total_core_cache_stats",
             clean_fail_cols=max(AccessOutcome.count(), 8),
         )
+        self.engine.ops = self._ops
         self.stats = self.engine  # StatTable-compatible view (tip)
         self.clean = self.engine.clean
         self.clean_fail = self.engine.clean_fail
@@ -511,6 +539,11 @@ class TPUSimulator:
             # recorder swap (which reassigns self.engine) captures it too.
             self.cache.miss_path.record = self._count
         self.log: List[str] = []
+        # Bandwidth next-free/byte-total bookkeeping is observable through
+        # SimResult.resources and the compiled engine's resource columns; the
+        # batched backend flips this off for all-synthetic workloads, whose
+        # results never read it, to skip the occupy calls entirely.
+        self._occupy_bw = True
         self._active: List[_Run] = []
         self._n_synth = 0  # active runs without an explicit trace (FF-eligible)
         self._cycle = 0
@@ -762,7 +795,8 @@ class TPUSimulator:
             access, n_lines = acc
             if access.atype in (AccessType.ICI_SND, AccessType.ICI_RCV):
                 # Collectives bypass VMEM; they occupy ICI link bandwidth.
-                self.ici.occupy(n_lines * cfg.line_size, cycle)
+                if self._occupy_bw:
+                    self.ici.occupy(n_lines * cfg.line_size, cycle)
                 self._count(access.atype, AccessOutcome.MISS, sid, cycle, n_lines)
                 if run.desc.trace is not None and run.trace_pos < len(run.desc.trace):
                     # ICI access from an explicit trace: consume the trace
@@ -786,7 +820,8 @@ class TPUSimulator:
                 # half-duplex HBM bucket with reads; the distinction is kept
                 # for byte attribution (Bandwidth.total_wr_bytes).
                 is_wr = access.atype in (AccessType.GLOBAL_ACC_W, AccessType.KV_ACC_W)
-                self.hbm.occupy(n_lines * cfg.line_size, cycle, is_write=is_wr)
+                if self._occupy_bw:
+                    self.hbm.occupy(n_lines * cfg.line_size, cycle, is_write=is_wr)
                 self._count(access.atype, AccessOutcome.MISS, sid, cycle, n_lines)
                 self._advance(run, access, n_lines)
                 budget -= 1
@@ -955,17 +990,20 @@ class TPUSimulator:
         cycles = cycles[order]
         sids = sids[order]
 
-        is_ici = types == int(_ICI_SND)
-        if is_ici.any():
-            _occupy_sequence(self.ici, cycles[is_ici], sizes[is_ici] * ls, None)
-        hbm_sel = ~is_ici
-        if hbm_sel.any():
-            _occupy_sequence(
-                self.hbm,
-                cycles[hbm_sel],
-                sizes[hbm_sel] * ls,
-                types[hbm_sel] == int(_GLOBAL_W),
-            )
+        if self._occupy_bw:
+            is_ici = types == int(_ICI_SND)
+            if is_ici.any():
+                _occupy_sequence(self.ici, cycles[is_ici], sizes[is_ici] * ls, None,
+                                 ops=self._ops)
+            hbm_sel = ~is_ici
+            if hbm_sel.any():
+                _occupy_sequence(
+                    self.hbm,
+                    cycles[hbm_sel],
+                    sizes[hbm_sel] * ls,
+                    types[hbm_sel] == int(_GLOBAL_W),
+                    ops=self._ops,
+                )
         self.engine.record_batch(
             types,
             np.full(len(types), int(_MISS), dtype=np.int64),
@@ -977,6 +1015,9 @@ class TPUSimulator:
 
     #: max chain accesses scanned per run per fast-forward window
     _DEP_FF_CAP = 1 << 15
+    #: chains spanning at least this many groups use the vectorized
+    #: resident-tag probe instead of per-group dict lookups
+    _DEP_PROBE_MIN_GROUPS = 8
 
     def _fast_forward_dep(self, cycle: int) -> int:
         """Batch dependent hit-chain cycles; returns the new cycle.
@@ -1058,12 +1099,37 @@ class TPUSimulator:
             cap = tp + self._DEP_FF_CAP
             g = run.ff_g
             j = tp
-            # scan whole groups: one residency lookup per touched line
-            while g < ng and g_ok[g] and g_tag[g] in lines:
-                j = g_end[g]
-                g += 1
-                if j >= cap or start + (j - tp) * stride >= E:
-                    break
+            # First access index that would end the window: the scan cap, or
+            # the first access issuing at/after E (the scalar loop consumes
+            # the group containing it, then breaks).
+            if E > start:
+                jcut = min(cap, tp + (E - start + stride - 1) // stride)
+            else:
+                jcut = tp
+            L = int(np.searchsorted(run.ff_gend_np, jcut, side="left"))
+            if L < g:
+                L = g
+            hi = L + 1 if L + 1 < ng else ng
+            if hi - g >= self._DEP_PROBE_MIN_GROUPS:
+                # Long chain: one batched cache-tag probe over every group
+                # this window could consume (sorted-membership against the
+                # cache's resident-tag snapshot) instead of per-group dict
+                # lookups.  G = first non-chain-hit group; the scalar loop
+                # stops at min(G, L+1) with j at the last consumed group end.
+                res = cache.resident_mask(run.ff_gtag_np[g:hi], self._ops)
+                bad = np.flatnonzero(~(run.ff_gok_np[g:hi] & res))
+                G = g + int(bad[0]) if bad.size else hi
+                g_stop = G if G <= L else L + 1
+                if g_stop > g:
+                    j = g_end[g_stop - 1]
+                g = g_stop
+            else:
+                # scan whole groups: one residency lookup per touched line
+                while g < ng and g_ok[g] and g_tag[g] in lines:
+                    j = g_end[g]
+                    g += 1
+                    if j >= cap or start + (j - tp) * stride >= E:
+                        break
             if j == tl and not (run.syn_rd or run.syn_wr or run.syn_ici):
                 # chain drains the whole trace → the next event is the retire
                 t = run.compute_end

@@ -21,6 +21,8 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
+import numpy as np
+
 from repro.core.stats import AccessOutcome, AccessType, FailOutcome
 
 __all__ = [
@@ -481,6 +483,10 @@ class VMEMCache:
                 hit_latency=hit_latency,
             )
         self._lines: "OrderedDict[int, _Line]" = OrderedDict()  # tag -> line, LRU order
+        #: lazily-built sorted array of resident tags, for the vectorized
+        #: batched tag probe; None whenever membership may have changed
+        #: (install/evict/flush — LRU reordering keeps membership intact).
+        self._tag_snapshot = None
         #: tag -> (ready_cycle, merge list in arrival order).  Responses drain
         #: to merged consumers on consecutive cycles (position in the list),
         #: which also desynchronizes previously-merged streams — matching the
@@ -539,6 +545,7 @@ class VMEMCache:
             # line, in which case the writeback is deferred until the entry
             # overflows out of the victim cache in turn.
             vtag, victim = lines.popitem(last=False)
+            self._tag_snapshot = None
             mp = self.miss_path
             absorbed, overflow = mp.on_evict(vtag, victim.dirty) if mp is not None else (False, None)
             if absorbed:
@@ -549,6 +556,7 @@ class VMEMCache:
                 self._writebacks += 1
                 self.hbm.occupy(self.line_size, cycle, is_write=True)
         lines[tag] = _Line(tag, dirty, cycle)
+        self._tag_snapshot = None
 
     # -- the access path -----------------------------------------------------------
     def access_line(self, tag: int, is_write: bool, cycle: int, stream_id: int) -> CacheDecision:
@@ -600,11 +608,29 @@ class VMEMCache:
     def resident(self, tag: int) -> bool:
         return tag in self._lines
 
+    def resident_tags_sorted(self) -> np.ndarray:
+        """Sorted array of resident line tags, cached until the next
+        membership change (install, evict, or flush)."""
+        snap = self._tag_snapshot
+        if snap is None:
+            snap = np.fromiter(
+                self._lines.keys(), dtype=np.int64, count=len(self._lines)
+            )
+            snap.sort()
+            self._tag_snapshot = snap
+        return snap
+
+    def resident_mask(self, tags: np.ndarray, ops) -> np.ndarray:
+        """Vectorized residency probe: ``tags[i] in self._lines`` for every
+        element, through the array-ops backend's sorted-membership kernel."""
+        return ops.sorted_membership(tags, self.resident_tags_sorted())
+
     def in_flight(self, tag: int) -> bool:
         return tag in self._mshr
 
     def flush(self) -> None:
         self._lines.clear()
+        self._tag_snapshot = None
         self._mshr.clear()
         self._mshr_heap.clear()
         if self.miss_path is not None:

@@ -64,6 +64,7 @@ __all__ = [
     "get_spec",
     "list_scenarios",
     "space_draws",
+    "divergent_draws",
     "value_only_draws",
     "ORACLE_KEYS",
     "DEFAULT_STREAM_NAME",
@@ -281,6 +282,7 @@ class ScenarioInstance:
         engine: Optional[str] = None,
         config: Optional[SimConfig] = None,
         sinks: Optional[Sequence[ReportSink]] = None,
+        sim_cls: type = TPUSimulator,
     ) -> TPUSimulator:
         """A fresh, fully-enqueued simulator for this scenario (streams
         created, events wired, kernels launched — ready to ``run()``).
@@ -288,7 +290,9 @@ class ScenarioInstance:
         ``config``/defaults.  The caller's ``config`` object is never mutated
         — overrides land on a copy, so one config can seed many scenario
         runs.  The compiled-trace batch backend uses this to compile a shape
-        without immediately running it."""
+        without immediately running it; the batched divergent backend passes
+        its own ``sim_cls`` (a TPUSimulator subclass with deferred report
+        landing — see ``repro.sim.batched``)."""
         cfg = copy.copy(config) if config is not None else SimConfig()
         for k, v in self.config_overrides.items():
             if not hasattr(cfg, k):
@@ -296,7 +300,7 @@ class ScenarioInstance:
             setattr(cfg, k, v)
         if engine is not None:
             cfg.engine = engine
-        sim = TPUSimulator(cfg, sinks=sinks)
+        sim = sim_cls(cfg, sinks=sinks)
         ids = {DEFAULT_STREAM_NAME: 0}
         for l in self.launches:
             if l.stream not in ids:
@@ -383,6 +387,31 @@ def space_draws(name: str, k: int, seed: int = 0) -> List[Dict[str, object]]:
     rng = random.Random(seed)
     keys = sorted(spec.space)
     return [{key: rng.choice(spec.space[key]) for key in keys} for _ in range(k)]
+
+
+def divergent_draws(k: int, seed: int = 0) -> List[Dict[str, object]]:
+    """The whole-registry *divergent* sweep: ``k`` param draws from **every**
+    scenario's space, as ``{"scenario": name, "params": {...}}`` job specs.
+
+    Divergent means the draws deliberately differ in control flow — stream
+    counts, trace lengths, launch staggers, fault arm points — so no two
+    jobs share a shape and the vector (same-shape replay) backend cannot
+    amortize them.  This is the workload the batched backend exists for;
+    each scenario's draws are independently seeded so adding a scenario
+    never reshuffles another's draws."""
+    return [
+        {"scenario": name, "params": params}
+        for name in list_scenarios()
+        for params in space_draws(name, k, seed=seed + _stable_seed(name))
+    ]
+
+
+def _stable_seed(name: str) -> int:
+    """Deterministic per-scenario seed offset (hash() is salted per process)."""
+    h = 0
+    for ch in name:
+        h = (h * 131 + ord(ch)) % 1_000_000_007
+    return h
 
 
 def value_only_draws(k: int, seed: int = 0,

@@ -49,7 +49,8 @@ API_SURFACE = {
         "Compute", "HW_V5E", "KernelDesc", "LINE_SIZE", "Launch",
         "ORACLE_KEYS", "ScenarioInstance", "ScenarioSpec", "SimConfig",
         "SimResult", "TPUSimulator", "VMEMCache", "build",
-        "deepbench_like_workload", "get_spec", "kernels_from_compiled",
+        "deepbench_like_workload", "divergent_draws", "get_spec",
+        "kernels_from_compiled",
         "kernels_from_summary", "l2_lat_expected_counts",
         "l2_lat_multistream", "list_scenarios", "mixed_stream_workload",
         "pointer_chase_trace", "run_job", "same_shape_jobs", "scenario",

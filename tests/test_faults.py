@@ -211,9 +211,18 @@ class TestPoolFaults:
         ref = BatchRunner(other, workers=1).run(parallel=False)
         assert res.signature() == ref.signature()
 
-    def test_vector_backend_rejects_pool_faults(self):
+    def test_vector_backend_rejects_armed_pool_faults(self):
+        # An unarmed plan is a no-op everywhere, so the vector backend
+        # accepts it; only pool-layer schedules (crash/hang/fail) require
+        # the process pool.
+        jobs = JOBS()
+        ref = BatchRunner(jobs).run(parallel=False)
+        res = BatchRunner(jobs, backend="vector",
+                          fault_plan=FaultPlan()).run()
+        assert res.signature() == ref.signature()
         with pytest.raises(ValueError, match="backend='pool'"):
-            BatchRunner(JOBS(), backend="vector", fault_plan=FaultPlan())
+            BatchRunner(JOBS(), backend="vector",
+                        fault_plan=FaultPlan(seed=1, crash_jobs=(0,)))
 
     @settings(max_examples=25, deadline=None,
               suppress_health_check=[HealthCheck.too_slow])

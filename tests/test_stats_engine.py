@@ -207,6 +207,36 @@ class TestStatTableApiParity:
         assert e.get(R, HIT, 0) == 10
 
 
+class TestScatterBackendBranches:
+    """S2: the flush scatter's bincount fast path must be count-identical to
+    the ``np.add.at`` path on the same event stream, across flush
+    boundaries and all lanes."""
+
+    @pytest.mark.parametrize("capacity", [64, 1 << 16])
+    def test_forced_bincount_identical_to_forced_add_at(self, capacity):
+        from repro.core.array_ops import NumpyOps
+
+        events = _random_events(17, 6000, n_streams=8)
+        engines = []
+        for threshold in (1, 1 << 60):  # always-bincount vs never-bincount
+            e = StatsEngine(capacity=capacity)
+            e.ops = NumpyOps(bincount_min_events=threshold)
+            for t, o, s, n, cy in events:
+                e.record(t, o, s, n, cy)
+                e.record_fail(t, int(n % FailOutcome.count()), s, n, cy)
+            engines.append(e)
+        via_bincount, via_add_at = engines
+        assert via_bincount.streams() == via_add_at.streams()
+        for sid in via_add_at.streams():
+            for kw in ({}, {"pw": True}, {"fail": True}):
+                assert np.array_equal(
+                    via_bincount.stream_matrix(sid, **kw),
+                    via_add_at.stream_matrix(sid, **kw),
+                )
+        assert np.array_equal(via_bincount.aggregate(), via_add_at.aggregate())
+        _assert_identical(via_bincount, *_drive_reference(events))
+
+
 class TestPaperInvariants:
     def test_sum_tip_geq_clean(self):
         """Σ tip ≥ clean, and the gap is exactly the lost updates (§5.2)."""
