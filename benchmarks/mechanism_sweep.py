@@ -76,6 +76,15 @@ SWEEP = [
     ("fault_kernel_abort", dict(streams=3, lines=2048, abort_after=200)),
     ("fault_straggler", dict(long_lines=65536, short_kernels=12,
                              short_lines=128, hbm_stall_at=64)),
+    # topology family (docs/DESIGN.md §5.14) — mechanisms act on each
+    # device's private VMEMCache miss path, so the sweep proves replay
+    # identity for mechanism x multi-chip combinations too
+    ("dist_dp_allreduce", dict(shape=(2, 2), grad_kb=512, local_kb=256)),
+    ("dist_pp_pipeline", dict(shape=(4,), microbatches=4, act_kb=128,
+                              work_kb=256)),
+    ("dist_ep_alltoall", dict(shape=(2, 2), expert_kb=128, local_kb=128)),
+    ("dist_straggler", dict(shape=(2, 2), grad_kb=512, local_kb=256,
+                            slow_factor=4.0)),
 ]
 QUICK_SWEEP = [
     ("l2_lat", dict(n_loads=1024, n_streams=4)),

@@ -36,6 +36,7 @@ def main() -> None:
         sim_compiled,
         sim_speed,
         stats_ingest,
+        topology_sweep,
     )
 
     # Fresh section payloads land in a temp dir — never over the checked-in
@@ -76,6 +77,8 @@ def main() -> None:
     section("divergent", divergent_sweep.run(quick=True))
     print("\n=== Miss-path mechanisms: vector sweep vs serial, per mechanism ===")
     section("mechanism", mechanism_sweep.run(quick=True))
+    print("\n=== Topology family: vector sweep vs serial over device meshes ===")
+    section("topology", topology_sweep.run(quick=True))
     print("\n=== Fault injection: armed-but-idle overhead + off-path identity ===")
     section("faults", fault_overhead.run())
     print("\n=== Fig 2: l2_lat 4-stream (tip / clean / serialized) ===")

@@ -71,6 +71,15 @@ SWEEP = [
     ("fault_kernel_abort", dict(streams=4, lines=4096, abort_after=300)),
     ("fault_straggler", dict(long_lines=131072, short_kernels=24,
                              short_lines=256, hbm_stall_at=64)),
+    # topology family (docs/DESIGN.md §5.14): shape/wrap/link-rate are
+    # structural, so each row compiles once and replays the per-device /
+    # per-link resource ledgers from the trace
+    ("dist_dp_allreduce", dict(shape=(2, 3), grad_kb=1024, local_kb=512)),
+    ("dist_pp_pipeline", dict(shape=(4,), microbatches=8, act_kb=256,
+                              work_kb=512)),
+    ("dist_ep_alltoall", dict(shape=(2, 3), expert_kb=256, local_kb=256)),
+    ("dist_straggler", dict(shape=(2, 2), grad_kb=1024, local_kb=512,
+                            slow_factor=4.0)),
 ]
 QUICK_SWEEP = [
     ("l2_lat", dict(n_loads=1024, n_streams=4)),

@@ -1,0 +1,191 @@
+"""Topology-sweep benchmark: vector-vs-serial timing over the ``dist_*``
+scenario family (docs/DESIGN.md §5.14).
+
+Every registered topology scenario runs a fixed multi-chip shape across
+``DRAWS`` value-only Monte-Carlo draws (jittered ``max_cycles``) twice
+through :class:`repro.sim.batch.BatchRunner`:
+
+* **serial** — ``backend="pool"`` run serially: one full event-engine
+  simulation per draw, per-device caches and per-link ledgers stepped
+  live;
+* **vector** — ``backend="vector"`` with a **cold** trace cache: one
+  compile per topology structural key (shape/wrap/link rate are all
+  structural — ``cc-trace-v4``), then lockstep replay restoring the
+  per-device/per-link resource columns from the trace.
+
+Every pair must be **bit-identical** on the full
+:meth:`BatchResult.signature`, and every payload's per-stream oracle
+(including the ``ICI_HOPS`` hop-count lanes) must hold — a replay
+divergence here means the topology resource snapshot went stale.  The
+aggregate speedup is recorded as ``speedup_topology`` so
+``benchmarks/regress.py`` gates the topology replay path independently of
+the single-chip sweeps.
+
+Writes ``BENCH_topology.json`` (repo root by default)::
+
+    PYTHONPATH=src python -m benchmarks.topology_sweep            # full tier
+    PYTHONPATH=src python -m benchmarks.topology_sweep --quick    # CI smoke tier
+
+Exit status is non-zero if any pair diverges, any oracle fails, the
+registry loses the ``dist_*`` family, or the speedup falls under the
+tier's floor.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.sim.batch import BatchJob, BatchRunner
+from repro.sim.compiled import TRACE_CACHE
+from repro.sim.scenarios import list_scenarios, value_only_draws
+
+from .common import csv_line
+
+#: aggregate vector-vs-serial speedup floor (CI gate)
+TARGET_SPEEDUP = 5.0
+#: loose floor for the quick smoke tier (small draws amortize less compile)
+QUICK_TARGET_SPEEDUP = 1.5
+#: value-only draws per topology shape
+DRAWS = 48
+QUICK_DRAWS = 12
+
+# One fixed multi-chip shape per dist scenario — heavy enough that replay
+# overhead stays well below a serial event run.  _missing() guards that
+# new dist_* scenarios get a row here.
+SWEEP = [
+    ("dist_dp_allreduce", dict(shape=(2, 3), grad_kb=1024, local_kb=512)),
+    ("dist_pp_pipeline", dict(shape=(4,), microbatches=8, act_kb=256,
+                              work_kb=512)),
+    ("dist_ep_alltoall", dict(shape=(2, 3), expert_kb=256, local_kb=256)),
+    ("dist_straggler", dict(shape=(2, 2), grad_kb=1024, local_kb=512,
+                            slow_factor=4.0)),
+]
+QUICK_SWEEP = [
+    ("dist_dp_allreduce", dict(shape=(2, 2), grad_kb=512, local_kb=256)),
+    ("dist_pp_pipeline", dict(shape=(4,), microbatches=4, act_kb=128,
+                              work_kb=256)),
+]
+
+
+def _missing() -> set:
+    family = {n for n in list_scenarios() if n.startswith("dist_")}
+    return family - {name for name, _ in SWEEP}
+
+
+def topology_jobs(name: str, params: dict, draws: int):
+    """``draws`` value-only jobs of one topology shape."""
+    return [
+        BatchJob.make(name, params, engine="event", config=cfg)
+        for cfg in value_only_draws(draws, seed=draws)
+    ]
+
+
+def run(quick: bool = False) -> dict:
+    if not any(n.startswith("dist_") for n in list_scenarios()):
+        raise RuntimeError("registry has no dist_* topology scenarios")
+    if _missing():
+        raise RuntimeError(
+            f"dist scenarios missing a benchmark shape: {sorted(_missing())} "
+            "— add rows to benchmarks/topology_sweep.py::SWEEP"
+        )
+    sweep = QUICK_SWEEP if quick else SWEEP
+    draws = QUICK_DRAWS if quick else DRAWS
+    target = QUICK_TARGET_SPEEDUP if quick else TARGET_SPEEDUP
+
+    serial_s = vector_s = 0.0
+    identical = True
+    oracle_failures = 0
+    per_shape = {}
+    for name, params in sweep:
+        jobs = topology_jobs(name, params, draws)
+        t0 = time.perf_counter()
+        serial = BatchRunner(jobs).run(parallel=False)
+        shape_serial = time.perf_counter() - t0
+
+        TRACE_CACHE.clear()  # cold cache: vector wall includes the compile
+        t0 = time.perf_counter()
+        vector = BatchRunner(jobs, backend="vector").run(parallel=False)
+        shape_vector = time.perf_counter() - t0
+
+        same = serial.signature() == vector.signature()
+        fails = sum(
+            1 for res in (serial, vector) for p in res.payloads
+            if p.get("oracle") is not None and not p["oracle"]["ok"]
+        )
+        identical &= same
+        oracle_failures += fails
+        serial_s += shape_serial
+        vector_s += shape_vector
+        per_shape[name] = {
+            "serial_s": round(shape_serial, 4),
+            "vector_s": round(shape_vector, 4),
+            "speedup": round(shape_serial / shape_vector, 2)
+            if shape_vector else float("inf"),
+            "identical": same,
+            "oracle_failures": fails,
+        }
+        csv_line(
+            f"topology_sweep_{name}",
+            shape_vector / max(draws, 1) * 1e6,
+            f"serial={shape_serial*1e3:.0f}ms vector={shape_vector*1e3:.0f}ms "
+            f"identical={same} oracle_failures={fails}",
+        )
+
+    speedup = serial_s / vector_s if vector_s else float("inf")
+    ok = identical and oracle_failures == 0 and speedup >= target
+    csv_line(
+        "topology_sweep_family",
+        vector_s * 1e6,
+        f"speedup={speedup:.1f}x target>={target} identical={identical} "
+        f"oracle_failures={oracle_failures}",
+    )
+    return {
+        "ok": ok,
+        "mode": "quick" if quick else "full",
+        "draws_per_shape": draws,
+        "n_shapes": len(sweep),
+        "family": sorted(n for n in list_scenarios() if n.startswith("dist_")),
+        "serial_s": round(serial_s, 4),
+        "vector_s": round(vector_s, 4),
+        # flat speedup_* key: benchmarks/regress.py walks `speedup_*`
+        "speedup_topology": round(speedup, 2),
+        "target_speedup": target,
+        "identical": identical,
+        "oracle_failures": oracle_failures,
+        "per_shape": per_shape,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke tier (fewer shapes/draws)")
+    ap.add_argument(
+        "--out",
+        default=os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                             "BENCH_topology.json"),
+        help="where to write the JSON trajectory (default: repo root)",
+    )
+    args = ap.parse_args()
+    payload = run(quick=args.quick)
+    payload["benchmark"] = "topology_sweep"
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    if not payload["ok"]:
+        print(
+            "FAIL: vector replay diverged, a dist oracle failed, or the "
+            f"topology speedup fell under {payload['target_speedup']}x",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

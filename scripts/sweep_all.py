@@ -42,6 +42,17 @@ def sweep_scenarios(args) -> int:
         print(f"--engines must name 'cycle', 'event' and/or 'compiled', got {args.engines!r}",
               file=sys.stderr)
         return 2
+    # The registry sweep must span the multi-chip topology family
+    # (dist_* scenarios, docs/DESIGN.md §5.14) — fail loudly if it ever
+    # drops out of the registry rather than silently shrinking coverage.
+    from repro.api import list_scenarios
+
+    topology_family = sorted(n for n in list_scenarios() if n.startswith("dist_"))
+    if not topology_family:
+        print("registry has no dist_* topology scenarios — sweep coverage "
+              "lost the multi-chip family", file=sys.stderr)
+        return 2
+    print(f"topology family in sweep: {', '.join(topology_family)}", flush=True)
     pooled = sweep(engines=engines, workers=args.workers or None, backend=args.backend)
     n_jobs = len(pooled.jobs)
     print(f"swept {n_jobs} jobs ({n_jobs//len(engines)} scenarios x {engines}) "
@@ -73,6 +84,7 @@ def sweep_scenarios(args) -> int:
                 "ok": identical is not False and not fails,
                 "n_jobs": n_jobs,
                 "engines": list(engines),
+                "topology_family": topology_family,
                 "workers": pooled.workers,
                 "pool_s": round(pooled.wall_s, 4),
                 "serial_s": round(serial_s, 4) if serial_s is not None else None,

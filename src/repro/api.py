@@ -262,6 +262,7 @@ def simulate(
         timeline=result.timeline,
         names=inst.stream_ids,
         events=events,
+        devices=result.devices or None,
     )
     return RunResult(
         result=result,
@@ -402,8 +403,14 @@ class Session:
         dependent: bool = False,
         issue_width: int = 1,
         addr_base: int = 0,
+        device: int = 0,
+        ici_route: Sequence[int] = (),
     ) -> KernelDesc:
-        """Queue one kernel on ``stream`` (created on first mention)."""
+        """Queue one kernel on ``stream`` (created on first mention).
+
+        ``device`` / ``ici_route`` place the kernel in a multi-chip topology
+        (``topology_shape`` in the session config — docs/DESIGN.md §5.14);
+        both are ignored on single-chip sessions."""
         if self._result is not None:
             raise RuntimeError("session already ran; build a new Session")
         if kernel is not None:
@@ -411,6 +418,7 @@ class Session:
                 ("name", name), ("trace", trace), ("rd_bytes", rd_bytes),
                 ("wr_bytes", wr_bytes), ("ici_bytes", ici_bytes),
                 ("flops", flops), ("addr_base", addr_base), ("dependent", dependent),
+                ("device", device), ("ici_route", tuple(ici_route)),
             ) if v]
             if issue_width != 1:
                 used.append("issue_width")
@@ -430,6 +438,8 @@ class Session:
                 addr_base=addr_base,
                 dependent=dependent,
                 issue_width=issue_width,
+                device=device,
+                ici_route=tuple(ici_route),
             )
         waits = (wait,) if isinstance(wait, str) else tuple(wait)
         records = (record,) if isinstance(record, str) else tuple(record)
@@ -450,6 +460,7 @@ class Session:
         names = {n: sid for n, sid in self._streams.items() if n != ""}
         frame = StatsFrame(
             result.stats, timeline=result.timeline, names=names, events=self.events,
+            devices=result.devices or None,
         )
         self._result = RunResult(
             result=result, frame=frame, scenario=None, params={}, stream_ids=names,

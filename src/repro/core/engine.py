@@ -505,6 +505,27 @@ class StatsEngine:
             return int(self.aggregate().sum())
         return int(self.stream_matrix(stream_id).sum())
 
+    def aggregate_by(
+        self,
+        groups: Dict[int, int],
+        *,
+        pw: bool = False,
+        fail: bool = False,
+    ) -> Dict[int, np.ndarray]:
+        """Per-group ``(T, O)`` rollups of the present streams: each stream's
+        block sums into ``groups[sid]`` (unmapped streams into group ``0`` —
+        the device-axis convention, docs/DESIGN.md §5.14).  One vectorized
+        sum per group over the dense store; group keys come out sorted."""
+        self.flush()
+        dense, _ = self._store(pw=pw, fail=fail)
+        members: Dict[int, list] = {}
+        for sid, slot in self._slots.items():
+            members.setdefault(int(groups.get(sid, 0)), []).append(slot)
+        return {
+            g: dense[slots].sum(axis=0, dtype=np.uint64)
+            for g, slots in sorted(members.items())
+        }
+
     # -- windows ----------------------------------------------------------------------
     def clear_pw(self) -> None:
         self.flush()

@@ -74,7 +74,7 @@ _VIEWS: Dict[str, Tuple[bool, Optional[int]]] = {
 }
 
 #: groupby/pivot axis names
-_AXES = ("stream", "access_type", "outcome", "kernel", "tenant")
+_AXES = ("stream", "access_type", "outcome", "kernel", "tenant", "device")
 
 
 class QueryError(ValueError):
@@ -137,8 +137,8 @@ class StatsFrame:
     (``streams()`` / ``stream_matrix()`` — read per stream, no dense block).
     """
 
-    __slots__ = ("_src", "_timeline", "_names", "_ids", "_tenants", "_events",
-                 "_view", "_streams", "_types", "_outcomes", "_window")
+    __slots__ = ("_src", "_timeline", "_names", "_ids", "_tenants", "_devices",
+                 "_events", "_view", "_streams", "_types", "_outcomes", "_window")
 
     def __init__(
         self,
@@ -147,6 +147,7 @@ class StatsFrame:
         timeline: Optional[KernelTimeline] = None,
         names: Optional[Mapping[str, int]] = None,
         tenants: Optional[Mapping[int, str]] = None,
+        devices: Optional[Mapping[int, int]] = None,
         events: Optional[EventJournal] = None,
         view: str = "tip",
     ) -> None:
@@ -159,6 +160,10 @@ class StatsFrame:
         #: stream id → tenant label (the serving engine's per-tenant
         #: attribution; see docs/DESIGN.md §5.12)
         self._tenants: Dict[int, str] = dict(tenants or {})
+        #: stream id → device id (the topology layer's per-device
+        #: attribution; unattributed streams belong to device 0 — see
+        #: docs/DESIGN.md §5.14)
+        self._devices: Dict[int, int] = dict(devices or {})
         self._events = events if events is not None else (
             source if isinstance(source, EventJournal) else None
         )
@@ -182,6 +187,7 @@ class StatsFrame:
         new._names = self._names
         new._ids = self._ids
         new._tenants = self._tenants
+        new._devices = self._devices
         new._events = self._events
         new._view = self._view if view is unset else view
         new._streams = self._streams if streams is unset else streams
@@ -219,6 +225,22 @@ class StatsFrame:
                 f"unknown tenant {tenant!r}; known: {sorted(set(self._tenants.values()))}"
             )
         return ids
+
+    def device_label(self, sid: int) -> int:
+        """The device owning a stream (``0`` when unattributed — single-chip
+        runs keep every stream on device 0)."""
+        return self._devices.get(sid, 0)
+
+    def _device_streams(self, device: int) -> Tuple[int, ...]:
+        """Present streams owned by ``device``.  Unmapped streams belong to
+        device 0; a device id outside the map (and not 0) is an error."""
+        d = int(device)
+        known = {0} | set(self._devices.values())
+        if d not in known:
+            raise QueryError(f"unknown device {device!r}; known: {sorted(known)}")
+        return tuple(
+            sid for sid in self._src.streams() if self._devices.get(sid, 0) == d
+        )
 
     def _resolve_type(self, t) -> int:
         if isinstance(t, str):
@@ -262,6 +284,7 @@ class StatsFrame:
         *,
         stream=None,
         tenant=None,
+        device=None,
         access_type=None,
         outcome=None,
         view: Optional[str] = None,
@@ -270,8 +293,11 @@ class StatsFrame:
         successive filters intersect.  ``tenant`` selects every stream the
         frame's tenant map attributes to that tenant (serving engines build
         their frames with the map; see :attr:`repro.serve.engine.Engine.frame`).
-        ``view`` switches the stat store — switching to/from a fail view
-        drops the outcome filter (the outcome axes are different enums)."""
+        ``device`` selects every present stream the frame's device map places
+        on that device (unmapped streams live on device 0; topology runs
+        build their frames with the map — docs/DESIGN.md §5.14).  ``view``
+        switches the stat store — switching to/from a fail view drops the
+        outcome filter (the outcome axes are different enums)."""
         f = self
         if view is not None:
             if view not in _VIEWS:
@@ -291,6 +317,15 @@ class StatsFrame:
             ids: Tuple[int, ...] = ()
             for t in _as_tuple(tenant):
                 ids += f._tenant_streams(t)
+            if f._streams is not None:
+                ids = self._intersect(f._streams, ids)
+            f = f._derive(streams=ids)
+        if device is not None:
+            if not _VIEWS[f._view][0]:
+                raise QueryError(f"view {f._view!r} has no stream axis")
+            ids = ()
+            for d in _as_tuple(device):
+                ids += f._device_streams(d)
             if f._streams is not None:
                 ids = self._intersect(f._streams, ids)
             f = f._derive(streams=ids)
@@ -623,20 +658,21 @@ class StatsFrame:
     def outcome_counts(self) -> Dict[str, int]:
         """The scenario-oracle key convention in one call:
         ``{"HIT", "MSHR_HIT", "MISS", "RES_FAIL", "VICTIM_HIT",
-        "MISS_CACHE_HIT", "PREFETCH_HIT", "PREFETCH_ISSUED", "KERNEL_ABORT",
-        "RETRY", "TIMEOUT_EXPIRED", "SHED", "RECOVERED", "TOTAL"}``
-        summed over the selected streams/types.  ``TOTAL`` counts each
-        successful demand access once — HIT + MSHR_HIT + MISS plus the three
-        miss-path mechanism hit lanes — so it is mechanism-invariant;
+        "MISS_CACHE_HIT", "PREFETCH_HIT", "PREFETCH_ISSUED", "ICI_HOPS",
+        "KERNEL_ABORT", "RETRY", "TIMEOUT_EXPIRED", "SHED", "RECOVERED",
+        "TOTAL"}`` summed over the selected streams/types.  ``TOTAL`` counts
+        each successful demand access once — HIT + MSHR_HIT + MISS plus the
+        three miss-path mechanism hit lanes — so it is mechanism-invariant;
         failures retry, so they are excluded (see ``repro.sim.scenarios``).
         ``PREFETCH_ISSUED`` sums the :data:`AccessType.PREFETCH` traffic
-        row, which is excluded from every demand key; the fault-injection
-        bookkeeping row (:data:`AccessType.FAULT`, docs/DESIGN.md §5.11) and
-        the serve-layer SLO row (:data:`AccessType.SLO`, §5.12) are likewise
-        excluded — fault lanes surface under their own keys and
-        never perturb ``TOTAL``.  Only meaningful on an access-outcome axis:
-        fail views (whose columns are ``FailOutcome`` reasons) are
-        rejected."""
+        row and ``ICI_HOPS`` the :data:`AccessType.ICI_HOP` per-link traffic
+        row (docs/DESIGN.md §5.14), both excluded from every demand key; the
+        fault-injection bookkeeping row (:data:`AccessType.FAULT`,
+        docs/DESIGN.md §5.11) and the serve-layer SLO row
+        (:data:`AccessType.SLO`, §5.12) are likewise excluded — fault lanes
+        surface under their own keys and never perturb ``TOTAL``.  Only
+        meaningful on an access-outcome axis: fail views (whose columns are
+        ``FailOutcome`` reasons) are rejected."""
         if self._view in ("fail", "clean_fail"):
             raise QueryError(
                 f"outcome_counts() reads AccessOutcome columns; view {self._view!r} "
@@ -665,6 +701,13 @@ class StatsFrame:
         slo_row = int(AccessType.SLO)
         if slo_row < m.shape[0]:
             demand[slo_row] = False
+        # per-link hop traffic (topology runs): traffic, not demand
+        hop_row = int(AccessType.ICI_HOP)
+        if hop_row < m.shape[0]:
+            ici_hops = int(m[hop_row].sum())
+            demand[hop_row] = False
+        else:
+            ici_hops = 0
         got = {
             "HIT": int(col(AccessOutcome.HIT)[demand].sum()),
             "MSHR_HIT": int(col(AccessOutcome.HIT_RESERVED)[demand].sum()),
@@ -674,6 +717,7 @@ class StatsFrame:
             "MISS_CACHE_HIT": int(col(AccessOutcome.MISS_CACHE_HIT)[demand].sum()),
             "PREFETCH_HIT": int(col(AccessOutcome.PREFETCH_HIT)[demand].sum()),
             "PREFETCH_ISSUED": pf_issued,
+            "ICI_HOPS": ici_hops,
             # fault lanes (KERNEL_ABORT..RECOVERED live on the FAULT row, but
             # serve/pool layers may attribute them on other rows too — sum
             # the whole column; demand rows never record these outcomes)
@@ -695,7 +739,8 @@ class StatsFrame:
         ``"kernel"`` (kernel grouping = each kernel's own stream over its
         timeline window; needs a timeline + events) / ``"tenant"`` (streams
         rolled up by the frame's tenant map; unattributed streams group
-        under ``""``)."""
+        under ``""``) / ``"device"`` (streams rolled up by the frame's
+        device map; unattributed streams group under device ``0``)."""
         if key not in _AXES:
             raise QueryError(f"unknown groupby key {key!r}; expected one of {_AXES}")
         return FrameGroupBy(self, key)
@@ -797,6 +842,15 @@ class FrameGroupBy:
                 members.setdefault(f.tenant_label(sid), []).append(sid)
             for label, sids in members.items():
                 out[label] = f._derive(streams=tuple(sids))
+        elif self._key == "device":
+            # one sub-frame per device over the *present* selected streams,
+            # in device-id order (stable rollup for reports); unmapped
+            # streams land on device 0
+            dev_members: Dict[int, list] = {}
+            for sid in f.streams():
+                dev_members.setdefault(f.device_label(sid), []).append(sid)
+            for label in sorted(dev_members):
+                out[label] = f._derive(streams=tuple(dev_members[label]))
         elif self._key == "access_type":
             n_t, _ = f._geometry()
             sel = f._types if f._types is not None else range(n_t)

@@ -91,6 +91,12 @@ class AccessType(enum.IntEnum):
     #: are microseconds/tokens, not accesses — like PREFETCH and FAULT it is
     #: excluded from every demand-side view
     SLO = 10
+    #: inter-chip link traversal in a multi-device topology (docs/DESIGN.md
+    #: §5.14): one event per link hop of a routed ICI transfer, attributed to
+    #: the sending stream.  The demand transfer itself is the ICI_SND row;
+    #: this row is per-hop *link traffic* — like PREFETCH, FAULT and SLO it
+    #: is excluded from every demand-side view
+    ICI_HOP = 11
 
     @classmethod
     def count(cls) -> int:

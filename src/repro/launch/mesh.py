@@ -9,7 +9,8 @@ jax device state):
 Axis roles (DESIGN.md §4): ``("pod","data")`` = DP; ``"data"`` also carries
 FSDP parameter sharding and long-context sequence parallelism; ``"model"``
 = TP/EP.  ``make_tiny_mesh`` builds the same role structure at toy sizes for
-CPU tests.
+CPU tests.  The shape/axis-name vocabulary itself lives in the jax-free
+:mod:`repro.launch.mesh_shapes`, shared with :mod:`repro.sim.topology`.
 """
 
 from __future__ import annotations
@@ -17,6 +18,8 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
+
+from .mesh_shapes import production_shape, tiny_shape
 
 __all__ = ["make_production_mesh", "make_tiny_mesh", "mesh_axis_sizes", "dp_axes"]
 
@@ -31,15 +34,11 @@ def _mk(shape: Tuple[int, ...], axes: Tuple[str, ...]):
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _mk(shape, axes)
+    return _mk(*production_shape(multi_pod=multi_pod))
 
 
 def make_tiny_mesh(*, multi_pod: bool = False, data: int = 2, model: int = 2):
-    shape = (2, data, model) if multi_pod else (data, model)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _mk(shape, axes)
+    return _mk(*tiny_shape(multi_pod=multi_pod, data=data, model=model))
 
 
 def mesh_axis_sizes(mesh) -> dict:

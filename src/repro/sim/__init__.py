@@ -23,6 +23,14 @@ from .scenarios import (
     value_only_draws,
 )
 from .batch import BatchJob, BatchResult, BatchRunner, run_job, same_shape_jobs, sweep_jobs
+from .topology import (
+    DeviceTopology,
+    all_reduce_ring,
+    all_reduce_tree,
+    all_to_all,
+    expected_link_bytes,
+    pipeline_send,
+)
 from .microbench import (
     deepbench_like_workload,
     l2_lat_expected_counts,
@@ -55,6 +63,12 @@ __all__ = [
     "space_draws",
     "divergent_draws",
     "value_only_draws",
+    "DeviceTopology",
+    "all_reduce_ring",
+    "all_reduce_tree",
+    "all_to_all",
+    "pipeline_send",
+    "expected_link_bytes",
     "BatchJob",
     "BatchResult",
     "BatchRunner",

@@ -486,10 +486,25 @@ class BatchRunner:
             # journal, whose resume semantics are pool bookkeeping — needs
             # the pool's retry/recovery machinery.
             armed = fault_plan is not None and not fault_plan.is_empty()
-            if armed or journal is not None:
+            if armed:
+                # Name the first job the plan's pool schedule would actually
+                # fault (falling back to job 0 for kernel-layer-only plans)
+                # so the error points at concrete work, not just the flag.
+                hit = next(
+                    (i for i in range(len(self.jobs))
+                     if fault_plan.pool_fault(i, 0) is not None), 0)
                 raise ValueError(
-                    f"an armed fault_plan/journal requires backend='pool' "
-                    f"(backend={backend!r} has no worker retry/recovery path)"
+                    f"an armed fault_plan requires backend='pool': job {hit} "
+                    f"({self.jobs[hit].scenario!r}) would run under "
+                    f"backend={backend!r}, which has no worker retry/recovery "
+                    f"path"
+                )
+            if journal is not None:
+                raise ValueError(
+                    f"journal={str(journal)!r} requires backend='pool': "
+                    f"resume bookkeeping is per-worker-payload, and job 0 "
+                    f"({self.jobs[0].scenario!r}) under backend={backend!r} "
+                    f"produces no journalable worker payloads"
                 )
         self.backend = backend
         self.fault_plan = fault_plan

@@ -78,8 +78,12 @@ __all__ = [
 
 #: bump when the CompiledTrace layout or key contents change
 #: (v3: SimConfig.fault_plan joined structural_key — fault-injected runs
-#: compile their own traces and fault-off keys changed shape)
-_KEY_VERSION = "cc-trace-v3"
+#: compile their own traces and fault-off keys changed shape;
+#: v4: multi-chip topology — SimConfig.topology_shape/topology_wrap/
+#: link_bytes_per_cycle and KernelDesc.device/ici_route joined the
+#: structural keys, seg_resources grew topology columns past the base 9,
+#: and traces carry the stream → device binding)
+_KEY_VERSION = "cc-trace-v4"
 
 
 def _engine_ctor_kwargs() -> dict:
@@ -142,7 +146,9 @@ class CompiledTrace:
     seg_bounds: np.ndarray
     #: cumulative resource counters at each boundary, one row per segment:
     #: (hbm next_free, hbm bytes, hbm rd, hbm wr, ici next_free, ici bytes,
-    #:  ici rd, ici wr, writebacks)
+    #:  ici rd, ici wr, writebacks) — the 9 base columns — plus, on topology
+    #: runs, the extra per-device / per-link columns appended by
+    #: ``TPUSimulator._resource_snapshot``
     seg_resources: np.ndarray
     engine_snapshot: dict
     timeline_state: Tuple
@@ -158,6 +164,10 @@ class CompiledTrace:
     #: replayed simulator is *resumed* with new work (replay itself never
     #: pays for it).
     cache_state: Tuple = ((), (), (), 0, None)
+    #: stream id → device id binding recorded at compile time (sorted item
+    #: pairs); replays re-attach it so per-device StatsFrame queries work on
+    #: replayed results exactly as on simulated ones
+    stream_devices: Tuple[Tuple[int, int], ...] = ()
     compile_seconds: float = 0.0
 
     @property
@@ -225,12 +235,11 @@ def _compile(sim: TPUSimulator) -> Tuple[CompiledTrace, SimResult]:
         raise RuntimeError("compile requires a fresh simulator (nothing run yet)")
     t0 = time.perf_counter()
     rec = RecordingStatsEngine()
-    hbm, ici, cache = sim.hbm, sim.ici, sim.cache
-    rec.segment_hook = lambda: (
-        hbm.next_free_cycle, hbm.total_bytes, hbm.total_rd_bytes, hbm.total_wr_bytes,
-        ici.next_free_cycle, ici.total_bytes, ici.total_rd_bytes, ici.total_wr_bytes,
-        float(cache.writebacks),
-    )
+    cache = sim.cache
+    # Base 9 columns plus the topology extras when one is attached — the
+    # executor owns the column layout (TPUSimulator._resource_snapshot /
+    # _restore_resources are exact inverses).
+    rec.segment_hook = sim._resource_snapshot
     # Swap the stat engine (and its views) before the first event lands.
     sim.engine = rec
     sim.stats = rec
@@ -262,7 +271,7 @@ def _compile(sim: TPUSimulator) -> Tuple[CompiledTrace, SimResult]:
         journal=journal,
         seg_bounds=np.asarray(rec.seg_bounds, dtype=np.int64),
         seg_resources=np.asarray(rec.seg_snaps, dtype=np.float64).reshape(
-            len(rec.seg_snaps), 9
+            len(rec.seg_snaps), len(rec.seg_snaps[0]) if rec.seg_snaps else 9
         ),
         engine_snapshot=rec.state_snapshot(),
         timeline_state=sim.timeline.state(),
@@ -271,6 +280,7 @@ def _compile(sim: TPUSimulator) -> Tuple[CompiledTrace, SimResult]:
         stream_flags=flags,
         fired_events=fired,
         cache_state=cache_state,
+        stream_devices=tuple(sorted(sim.stream_devices.items())),
         compile_seconds=time.perf_counter() - t0,
     )
     result = SimResult(
@@ -280,6 +290,7 @@ def _compile(sim: TPUSimulator) -> Tuple[CompiledTrace, SimResult]:
         clean_fail=rec.clean_fail,
         timeline=sim.timeline,
         log=sim.log,
+        devices=dict(sim.stream_devices),
     )
     return trace, result
 
@@ -327,6 +338,7 @@ def _materialize(trace: CompiledTrace, cfg: SimConfig,
         clean_fail=engine.clean_fail,
         timeline=timeline,
         log=log,
+        devices=dict(trace.stream_devices),
     )
 
 
@@ -347,17 +359,18 @@ def replay_batch(trace: CompiledTrace, configs: Sequence[SimConfig],
     for cfg in configs:
         _guard_max_cycles(trace, cfg)
     n = len(configs)
+    R = trace.seg_resources.shape[1] if trace.n_segments else 9
     if trace.n_segments and n:
         from repro.core.array_ops import get_backend
 
         ops = get_backend(configs[0].array_backend)
         deltas = np.diff(trace.seg_resources, axis=0, prepend=0.0)
-        # (segments, 9) replay; the backend running sum is a strict left
+        # (segments, R) replay; the backend running sum is a strict left
         # fold, element-identical to np.add.accumulate
         lockstep = np.asarray(ops.running_sum(deltas))
-        finals = np.broadcast_to(lockstep[-1][:, None], (9, n))
+        finals = np.broadcast_to(lockstep[-1][:, None], (R, n))
     else:
-        finals = np.zeros((9, n))
+        finals = np.zeros((R, n))
     out = []
     for i, cfg in enumerate(configs):
         res = _materialize(trace, cfg, sinks=sinks)
@@ -366,6 +379,10 @@ def replay_batch(trace: CompiledTrace, configs: Sequence[SimConfig],
             "ici": tuple(finals[4:8, i]),
             "writebacks": int(finals[8, i]),
         }
+        if R > 9:
+            # topology runs: the per-device / per-link columns appended by
+            # TPUSimulator._resource_snapshot, in its deterministic order
+            res.resources["topology"] = tuple(finals[9:, i])
         out.append(res)
     return out
 
@@ -397,6 +414,7 @@ def run_compiled(sim: TPUSimulator) -> SimResult:
             clean_fail=sim.engine.clean_fail,
             timeline=sim.timeline,
             log=sim.log,
+            devices=dict(sim.stream_devices),
         )
     trace, compiled_result = get_or_compile(sim)
     if compiled_result is not None:
@@ -421,17 +439,8 @@ def run_compiled(sim: TPUSimulator) -> SimResult:
         if ev is not None:
             ev.fired = True
     if trace.n_segments:
-        (sim.hbm.next_free_cycle, hbm_t, hbm_r, hbm_w,
-         sim.ici.next_free_cycle, ici_t, ici_r, ici_w, wrbk) = (
-            trace.seg_resources[-1]
-        )
-        sim.hbm.total_bytes = int(hbm_t)
-        sim.hbm.total_rd_bytes = int(hbm_r)
-        sim.hbm.total_wr_bytes = int(hbm_w)
-        sim.ici.total_bytes = int(ici_t)
-        sim.ici.total_rd_bytes = int(ici_r)
-        sim.ici.total_wr_bytes = int(ici_w)
-        sim.cache._writebacks = int(wrbk)
+        sim._restore_resources(trace.seg_resources[-1])
+    sim.stream_devices = dict(trace.stream_devices)
     sim._deferred_cache_state = trace.cache_state  # restored only on resume
     # The replayed snapshot already contains every recorded fault event
     # (including end-of-run RECOVERED sweeps); disarm this simulator's own

@@ -72,6 +72,7 @@ _RESFAIL = AccessOutcome.RESERVATION_FAILURE
 _FAULT = AccessType.FAULT
 _KERNEL_ABORT = AccessOutcome.KERNEL_ABORT
 _RECOVERED = AccessOutcome.RECOVERED
+_ICI_HOP = AccessType.ICI_HOP
 
 
 @dataclass
@@ -113,6 +114,22 @@ class SimConfig:
     #: subsystem.  Structural: a plan change is a different simulation, so
     #: this field joins structural_key() and the compiled-trace cache key.
     fault_plan: Optional[FaultPlan] = None
+    #: multi-chip topology (docs/DESIGN.md §5.14): a device-mesh shape in the
+    #: launch layer's axis vocabulary — ``()`` (default) is the single-chip
+    #: legacy model, ``(4,)`` a 4-device ring over ("data",), ``(2, 2)`` a
+    #: mesh over ("data", "model"), rank 3 adds "pod".  Non-empty shapes give
+    #: every device its own VMEMCache + HBM ledger (device 0 *shares* the
+    #: simulator's legacy self.cache/self.hbm, so a single-device topology is
+    #: bit-identical to no topology) and route kernel ICI traffic hop-by-hop
+    #: over contended per-link Bandwidth ledgers (repro.sim.topology).  All
+    #: three topology fields are structural: they change what a simulation
+    #: does, so they join structural_key() and the compiled-trace cache key.
+    topology_shape: Tuple[int, ...] = ()
+    #: per-axis ring wraparound links (only at axis sizes > 2, where the wrap
+    #: link is distinct from the existing neighbour pair)
+    topology_wrap: bool = True
+    #: inter-chip link bandwidth; 0.0 defaults to ``ici_bytes_per_cycle``
+    link_bytes_per_cycle: float = 0.0
     #: main-loop implementation: "event" (cycle-skipping, default), "cycle"
     #: (reference cycle-stepped loop), or "compiled" (trace-compile/replay:
     #: the event loop runs once per scenario *shape* and every further run of
@@ -157,6 +174,14 @@ class SimResult:
     clean_fail: CleanView
     timeline: KernelTimeline
     log: List[str]
+    #: stream id → owning device id (docs/DESIGN.md §5.14).  Populated from
+    #: each stream's first kernel launch when a topology is configured;
+    #: empty on single-chip runs (every stream then reads as device 0
+    #: through the frame's device axis).  Deliberately *not* part of
+    #: :meth:`signature` — the device map is launch metadata, and keeping it
+    #: out is what makes a single-device topology signature-identical to the
+    #: legacy single-chip model.
+    devices: Dict[int, int] = field(default_factory=dict)
 
     def tip_aggregate(self):
         return self.stats.aggregate()
@@ -164,9 +189,11 @@ class SimResult:
     @property
     def frame(self) -> StatsFrame:
         """The run's stats as a :class:`~repro.core.query.StatsFrame`
-        (timeline attached; stream *names* attach at the ``repro.api``
-        layer, which knows the scenario's name → id map)."""
-        return StatsFrame(self.stats, timeline=self.timeline)
+        (timeline and the stream → device map attached; stream *names*
+        attach at the ``repro.api`` layer, which knows the scenario's
+        name → id map)."""
+        return StatsFrame(self.stats, timeline=self.timeline,
+                          devices=self.devices or None)
 
     def signature(self) -> dict:
         """Everything observable about the simulation, as comparable plain
@@ -213,6 +240,10 @@ class _Run:
         "syn_lines_per_beat",
         "syn_cursor",
         "issue_tokens",
+        "device",
+        "cache",
+        "hbm",
+        "hops",
         "ff_at_np",
         "ff_tag_np",
         "ff_wr_np",
@@ -250,6 +281,14 @@ class _Run:
         self.syn_rd, self.syn_wr, self.syn_ici = rd, wr, ici
         self.syn_cursor = desc.addr_base
         self.issue_tokens = 0.0
+        # Device binding (docs/DESIGN.md §5.14): TPUSimulator._launch points
+        # cache/hbm at the owning device's resources (aliases of the
+        # simulator's own on single-chip runs) and resolves the kernel's ICI
+        # route into link hops; empty hops = the legacy single-link model.
+        self.device = desc.device
+        self.cache = None
+        self.hbm = None
+        self.hops: Tuple[Tuple[int, int], ...] = ()
         self.ff_gend: Optional[List[int]] = None  # built lazily by _build_ff
 
     def _build_ff(self, line_size: int) -> None:
@@ -518,26 +557,37 @@ class TPUSimulator:
         self.hbm = Bandwidth(self.cfg.hbm_bytes_per_cycle)
         self.ici = Bandwidth(self.cfg.ici_bytes_per_cycle)
         self.compute = Compute(self.cfg.flops_per_cycle)
-        self.cache = VMEMCache(
-            self.cfg.vmem_capacity,
-            self.cfg.line_size,
-            self.hbm,
-            hbm_latency=self.cfg.hbm_latency,
-            mshr_entries=self.cfg.mshr_entries,
-            mshr_max_merge=self.cfg.mshr_max_merge,
-            bw_stall_horizon=self.cfg.bw_stall_horizon,
-            miss_mechanism=self.cfg.miss_mechanism,
-            victim_entries=self.cfg.victim_entries,
-            miss_cache_entries=self.cfg.miss_cache_entries,
-            stream_buffers=self.cfg.stream_buffers,
-            stream_buffer_depth=self.cfg.stream_buffer_depth,
-            hit_latency=self.cfg.vmem_hit_latency,
-        )
-        if self.cache.miss_path is not None:
-            # Prefetch traffic lands on the PREFETCH stat row through the
-            # same late-bound path as demand events, so the compiled-trace
-            # recorder swap (which reassigns self.engine) captures it too.
-            self.cache.miss_path.record = self._count
+        self.cache = self._make_cache(self.hbm)
+        # Multi-chip topology (docs/DESIGN.md §5.14): devices 1..N-1 get
+        # their own HBM ledger + VMEMCache; device 0 *shares* self.hbm /
+        # self.cache above, which is what makes a single-device topology —
+        # and the base resource columns of a compiled trace — bit-identical
+        # to the legacy single-chip model.
+        self.topology = None
+        self.stream_devices: Dict[int, int] = {}
+        if self.cfg.topology_shape:
+            from .topology import DeviceTopology  # deferred: only multi-chip runs pay it
+
+            topo = DeviceTopology(
+                self.cfg.topology_shape,
+                wrap=self.cfg.topology_wrap,
+                link_bytes_per_cycle=(
+                    self.cfg.link_bytes_per_cycle or self.cfg.ici_bytes_per_cycle
+                ),
+            )
+            topo.hbms = [self.hbm]
+            topo.caches = [self.cache]
+            for _ in range(1, topo.n_devices):
+                hbm = Bandwidth(self.cfg.hbm_bytes_per_cycle)
+                topo.hbms.append(hbm)
+                topo.caches.append(self._make_cache(hbm))
+            self.topology = topo
+        for cache in ([self.cache] if self.topology is None else self.topology.caches):
+            if cache.miss_path is not None:
+                # Prefetch traffic lands on the PREFETCH stat row through the
+                # same late-bound path as demand events, so the compiled-trace
+                # recorder swap (which reassigns self.engine) captures it too.
+                cache.miss_path.record = self._count
         self.log: List[str] = []
         # Bandwidth next-free/byte-total bookkeeping is observable through
         # SimResult.resources and the compiled engine's resource columns; the
@@ -552,6 +602,62 @@ class TPUSimulator:
         # so fault-plan-off runs take exactly the pre-fault code path.
         plan = self.cfg.fault_plan
         self._faults = _FaultState(plan) if plan is not None and plan.kernel_faults else None
+
+    def _make_cache(self, hbm: Bandwidth) -> VMEMCache:
+        """One device's VMEMCache over its HBM ledger, from the config."""
+        cfg = self.cfg
+        return VMEMCache(
+            cfg.vmem_capacity,
+            cfg.line_size,
+            hbm,
+            hbm_latency=cfg.hbm_latency,
+            mshr_entries=cfg.mshr_entries,
+            mshr_max_merge=cfg.mshr_max_merge,
+            bw_stall_horizon=cfg.bw_stall_horizon,
+            miss_mechanism=cfg.miss_mechanism,
+            victim_entries=cfg.victim_entries,
+            miss_cache_entries=cfg.miss_cache_entries,
+            stream_buffers=cfg.stream_buffers,
+            stream_buffer_depth=cfg.stream_buffer_depth,
+            hit_latency=cfg.vmem_hit_latency,
+        )
+
+    def _resource_snapshot(self) -> Tuple[float, ...]:
+        """Flat resource columns for the compiled engine's per-segment rows
+        (:mod:`repro.sim.compiled`): the 9 legacy base columns — device-0
+        HBM (next-free, total, rd, wr), the legacy ICI link (same four),
+        device-0 writebacks — then, when a topology is attached, its extra
+        per-device / per-link columns in deterministic order."""
+        base = (
+            self.hbm.next_free_cycle,
+            float(self.hbm.total_bytes),
+            float(self.hbm.total_rd_bytes),
+            float(self.hbm.total_wr_bytes),
+            self.ici.next_free_cycle,
+            float(self.ici.total_bytes),
+            float(self.ici.total_rd_bytes),
+            float(self.ici.total_wr_bytes),
+            float(self.cache.writebacks),
+        )
+        if self.topology is None:
+            return base
+        return base + self.topology.resource_snapshot()
+
+    def _restore_resources(self, row: Sequence[float]) -> None:
+        """Inverse of :meth:`_resource_snapshot` — mirror a compiled trace's
+        end-of-run resource state onto this simulator (lockstep replay)."""
+        hbm, ici = self.hbm, self.ici
+        hbm.next_free_cycle = float(row[0])
+        hbm.total_bytes = int(row[1])
+        hbm.total_rd_bytes = int(row[2])
+        hbm.total_wr_bytes = int(row[3])
+        ici.next_free_cycle = float(row[4])
+        ici.total_bytes = int(row[5])
+        ici.total_rd_bytes = int(row[6])
+        ici.total_wr_bytes = int(row[7])
+        self.cache._writebacks = int(row[8])
+        if self.topology is not None:
+            self.topology.restore_resource_snapshot(row[9:])
 
     # -- stream/launch API (mirrors cuda<<<>>> + events) -------------------------
     def create_stream(self, name: str = "", priority: int = 0):
@@ -599,6 +705,7 @@ class TPUSimulator:
             clean_fail=self.clean_fail,
             timeline=self.timeline,
             log=self.log,
+            devices=dict(self.stream_devices),
         )
 
     def _launch(self, w: WorkItem, cycle: int) -> _Run:
@@ -606,7 +713,18 @@ class TPUSimulator:
         cfg = self.cfg
         desc: KernelDesc = w.payload  # type: ignore[assignment]
         self.streams.mark_launched(w)
-        n_sharers = len(self._active) + 1
+        topo = self.topology
+        if topo is None:
+            n_sharers = len(self._active) + 1
+        else:
+            if not 0 <= desc.device < topo.n_devices:
+                raise ValueError(
+                    f"kernel {desc.name!r} targets device {desc.device} but the "
+                    f"topology {cfg.topology_shape} has {topo.n_devices} devices"
+                )
+            # Compute units are per chip: only co-resident kernels on the
+            # same device share its FLOP rate.
+            n_sharers = sum(1 for r in self._active if r.device == desc.device) + 1
         compute_end = cycle + self.compute.cycles_for(desc.flops, n_sharers)
         run = _Run(
             desc,
@@ -616,6 +734,20 @@ class TPUSimulator:
             cfg.max_synth_beats,
             cfg.stream_slowdown.get(w.stream_id, 1.0),
         )
+        if topo is None:
+            run.cache = self.cache
+            run.hbm = self.hbm
+        else:
+            run.cache = topo.caches[desc.device]
+            run.hbm = topo.hbms[desc.device]
+            # Non-empty on multi-device topologies: the kernel's explicit
+            # ici_route (or default ring-successor route) resolved to link
+            # hops; flips the ICI issue path from the legacy single link to
+            # hop-by-hop routed occupancy.
+            run.hops = topo.hops_for(desc)
+            # First launch binds the stream to its device — the stream ×
+            # device attribution map (SimResult.devices / StatsFrame axis).
+            self.stream_devices.setdefault(w.stream_id, desc.device)
         self._active.append(run)
         if run.trace is None:
             self._n_synth += 1
@@ -633,7 +765,11 @@ class TPUSimulator:
             if self._cycle >= cfg.max_cycles:
                 raise RuntimeError(f"simulation exceeded max_cycles={cfg.max_cycles}")
             cycle = self._cycle
-            self.cache.tick(cycle)
+            if self.topology is None:
+                self.cache.tick(cycle)
+            else:
+                for cache in self.topology.caches:
+                    cache.tick(cycle)
 
             # Launch at most one kernel per cycle (Accel-Sim launches happen on
             # distinct cycles; this stagger is also what keeps the §5.1
@@ -692,14 +828,21 @@ class TPUSimulator:
             if faults is not None:
                 faults.finish(self, self._cycle)
             return
+        topo = self.topology
         launch_ready = True
         cycle = self._cycle
         while True:
             if cycle >= max_cycles:
                 self._cycle = cycle
                 raise RuntimeError(f"simulation exceeded max_cycles={cfg.max_cycles}")
-            if heap and heap[0][0] <= cycle:
-                cache.tick(cycle)
+            if topo is None:
+                if heap and heap[0][0] <= cycle:
+                    cache.tick(cycle)
+            else:
+                for c in topo.caches:
+                    h = c._mshr_heap
+                    if h and h[0][0] <= cycle:
+                        c.tick(cycle)
 
             if launch_ready:
                 w = streams.next_launchable(serialize=serialize)
@@ -716,7 +859,11 @@ class TPUSimulator:
 
             # Collapse deterministic stretches into one vectorized batch:
             # pure synthesized-beat windows, or dependent hit-chain windows.
-            if active and not launch_ready:
+            # Topology runs step per-cycle instead: both fast-forward paths
+            # assume the single shared cache/HBM/ICI triple, and FF is a pure
+            # speed optimization (provably bit-identical to stepping), so
+            # skipping it under a topology changes nothing observable.
+            if active and not launch_ready and topo is None:
                 n_synth = self._n_synth
                 if n_synth == len(active):
                     nxt = self._fast_forward(cycle)
@@ -795,7 +942,23 @@ class TPUSimulator:
             access, n_lines = acc
             if access.atype in (AccessType.ICI_SND, AccessType.ICI_RCV):
                 # Collectives bypass VMEM; they occupy ICI link bandwidth.
-                if self._occupy_bw:
+                hops = run.hops
+                if hops:
+                    # Routed over the topology's links (docs/DESIGN.md
+                    # §5.14): store-and-forward — hop i+1 enters its link's
+                    # contention queue when hop i completes — with one
+                    # ICI_HOP stat event per line per link traversed, on the
+                    # sending stream.  The legacy single-link ledger is
+                    # untouched on this path.
+                    if self._occupy_bw:
+                        nb = n_lines * cfg.line_size
+                        links = self.topology.links
+                        t = cycle
+                        for hop in hops:
+                            t = links[hop].occupy(nb, t)
+                    self._count(_ICI_HOP, AccessOutcome.MISS, sid, cycle,
+                                n_lines * len(hops))
+                elif self._occupy_bw:
                     self.ici.occupy(n_lines * cfg.line_size, cycle)
                 self._count(access.atype, AccessOutcome.MISS, sid, cycle, n_lines)
                 if run.desc.trace is not None and run.trace_pos < len(run.desc.trace):
@@ -821,7 +984,7 @@ class TPUSimulator:
                 # for byte attribution (Bandwidth.total_wr_bytes).
                 is_wr = access.atype in (AccessType.GLOBAL_ACC_W, AccessType.KV_ACC_W)
                 if self._occupy_bw:
-                    self.hbm.occupy(n_lines * cfg.line_size, cycle, is_write=is_wr)
+                    run.hbm.occupy(n_lines * cfg.line_size, cycle, is_write=is_wr)
                 self._count(access.atype, AccessOutcome.MISS, sid, cycle, n_lines)
                 self._advance(run, access, n_lines)
                 budget -= 1
@@ -851,7 +1014,7 @@ class TPUSimulator:
                 is_wr = at == _GLOBAL_W or at == _KV_W
                 sid = run.sid
                 engine = self.engine
-                cache_access = self.cache.access_line
+                cache_access = run.cache.access_line
                 if lo == hi:
                     decision = cache_access(lo, is_wr, cycle, sid)
                     outcome = decision.outcome
@@ -904,6 +1067,8 @@ class TPUSimulator:
         """
         cfg = self.cfg
         active = self._active
+        if self.topology is not None:
+            return cycle  # routed ICI / per-device resources: step per-cycle
         E = cfg.max_cycles
         for run in active:
             if run.slowdown != 1.0 or run.issue_tokens != 0.0:
@@ -1034,6 +1199,8 @@ class TPUSimulator:
         exactly by moving each touched line in final-touch order.
         """
         cfg = self.cfg
+        if self.topology is not None:
+            return cycle  # per-device caches: step per-cycle instead
         cache = self.cache
         lines = cache._lines
         active = self._active
@@ -1207,7 +1374,7 @@ class TPUSimulator:
         cfg = self.cfg
         last_decision: Optional[CacheDecision] = None
         for tag in access.lines(cfg.line_size):
-            decision = self.cache.access_line(
+            decision = run.cache.access_line(
                 tag, access.atype in (AccessType.GLOBAL_ACC_W, AccessType.KV_ACC_W), cycle, sid
             )
             if decision.outcome == AccessOutcome.RESERVATION_FAILURE:

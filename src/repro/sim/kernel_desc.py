@@ -70,6 +70,12 @@ class KernelDesc:
     addr_base: int = 0  # base address for synthesized streaming accesses
     dependent: bool = False
     issue_width: int = 4  # accesses issued per cycle (independent-access kernels)
+    #: owning device in a multi-chip topology (ignored when topology is off).
+    device: int = 0
+    #: explicit inter-chip route for ``ici_bytes`` — a tuple of device ids
+    #: (hop endpoints) starting at ``device``.  Empty = topology-routed to
+    #: the neighbour (single-device: the legacy single-link ICI model).
+    ici_route: Tuple[int, ...] = ()
     uid: int = field(default_factory=lambda: next(_uid_counter))
     #: derived per-access columns for the event engine's hit-chain batching,
     #: cached here so repeated simulations of one descriptor skip the trace
@@ -108,7 +114,8 @@ class KernelDesc:
             self._skey = (
                 self.name, self.flops, trace_digest, self.hbm_rd_bytes,
                 self.hbm_wr_bytes, self.ici_bytes, self.addr_base,
-                self.dependent, self.issue_width,
+                self.dependent, self.issue_width, self.device,
+                tuple(self.ici_route),
             )
         return self._skey
 

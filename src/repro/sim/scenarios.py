@@ -81,6 +81,7 @@ __all__ = [
 ORACLE_KEYS = (
     "HIT", "MSHR_HIT", "MISS", "RES_FAIL", "TOTAL",
     "VICTIM_HIT", "MISS_CACHE_HIT", "PREFETCH_HIT", "PREFETCH_ISSUED",
+    "ICI_HOPS",
     "KERNEL_ABORT", "RETRY", "TIMEOUT_EXPIRED", "SHED", "RECOVERED",
 )
 
@@ -331,8 +332,11 @@ class ScenarioInstance:
     # -- oracle as a StatsFrame query ---------------------------------------------
     def frame(self, res: SimResult) -> StatsFrame:
         """``res``'s stats as a query frame with this scenario's stream
-        *names* resolvable (``frame.filter(stream="prio_hi")``)."""
-        return StatsFrame(res.stats, timeline=res.timeline, names=self.stream_ids)
+        *names* resolvable (``frame.filter(stream="prio_hi")``) and, for
+        topology scenarios, the stream→device map bound
+        (``frame.groupby("device")``)."""
+        return StatsFrame(res.stats, timeline=res.timeline,
+                          names=self.stream_ids, devices=res.devices or None)
 
     def expected_for(self, config=None) -> Optional[Dict]:
         """The per-stream oracle for a run under ``config``.
@@ -434,14 +438,15 @@ def _lines(n_bytes: int) -> int:
 
 
 def _synth(name: str, *, rd: int = 0, wr: int = 0, ici: int = 0, flops: float = 0.0,
-           base: int = 0) -> Tuple[KernelDesc, int]:
+           base: int = 0, device: int = 0) -> Tuple[KernelDesc, int]:
     """An aggregate-cost kernel plus its exact access count: synthesized
     beats bypass VMEM residency and are classified MISS, so the per-kernel
     count is ``ceil(rd/line) + ceil(wr/line) + ceil(ici/line)`` regardless of
-    scheduling — the most robust oracle the model offers."""
+    scheduling — the most robust oracle the model offers.  ``device`` places
+    the kernel on a topology device (distributed scenarios)."""
     kd = KernelDesc(
         name=name, flops=flops, hbm_rd_bytes=rd, hbm_wr_bytes=wr, ici_bytes=ici,
-        addr_base=base,
+        addr_base=base, device=device,
     )
     return kd, _lines(rd) + _lines(wr) + _lines(ici)
 
@@ -863,13 +868,163 @@ def _producer_consumer_mech_oracle(params, config, expected):
     return out
 
 
+# --------------------------------------------------------------------------- distributed
+def _topo_for(shape) -> "DeviceTopology":
+    """A structural DeviceTopology for oracle hop counting (link bandwidth is
+    irrelevant to routing, so any value works; the simulator builds its own
+    resource-bearing instance from the config overrides)."""
+    from .topology import DeviceTopology
+
+    return DeviceTopology(tuple(shape), link_bytes_per_cycle=1.0)
+
+
+def _dist_expected(stream: str, demand_lines: int, hop_events: int) -> Dict[str, int]:
+    """Per-stream oracle row for a distributed scenario: synthesized kernels
+    classify every demand line MISS (ICI_SND included), and routed transfers
+    add ``lines × hops`` ICI_HOP link events (excluded from TOTAL — they are
+    per-link traffic, not demand accesses)."""
+    return {**_miss_only(demand_lines), "ICI_HOPS": hop_events}
+
+
+@scenario("dist_dp_allreduce", space={"shape": ((2,), (4,), (2, 2), (2, 3)),
+                                      "grad_kb": (64, 256)})
+def dist_dp_allreduce(shape=(2, 2), grad_kb=128, local_kb=64, flops=1.0e6):
+    """Data-parallel step on a device mesh: every device (one stream each)
+    computes local gradients, then joins a ring all-reduce — each device
+    ships ``2·(N-1)·ceil(bytes/N)`` to its ring successor over the routed
+    topology links (docs/DESIGN.md §5.14).
+
+    Oracle: all kernels synthesized → per-stream MISS = local read lines +
+    on-wire ICI lines; ICI_HOPS = ICI lines × the device's route hop count
+    (ring successors may be multi-hop on a mesh).
+    """
+    from .topology import all_reduce_ring
+
+    topo = _topo_for(shape)
+    launches: List[Launch] = []
+    expected: Dict[str, Dict[str, int]] = {}
+    ring = all_reduce_ring(topo, grad_kb << 10, name="ar", flops=0.0)
+    for d in range(topo.n_devices):
+        sname = f"dp_{d}"
+        lk, ln = _synth(f"grad_{d}", rd=local_kb << 10, flops=flops,
+                        base=(64 + d) << 24, device=d)
+        launches.append(Launch(sname, lk))
+        ar = ring[d]
+        launches.append(Launch(sname, ar))
+        ici_lines = _lines(ar.ici_bytes)
+        hops = len(topo.hops_for(ar))
+        expected[sname] = _dist_expected(sname, ln + ici_lines, ici_lines * hops)
+    return launches, expected, {"topology_shape": tuple(shape)}
+
+
+@scenario("dist_pp_pipeline", space={"shape": ((2,), (4,)),
+                                     "microbatches": (2, 4)})
+def dist_pp_pipeline(shape=(4,), microbatches=4, act_kb=32, work_kb=64):
+    """Pipeline parallelism over topology stages: stage *d* (one stream per
+    device, devices in flattened order) runs its microbatch compute, sends
+    activations to stage ``d+1`` over the routed link, and the downstream
+    stage's compute waits on the send's event (``cudaStreamWaitEvent``
+    pipeline idiom).
+
+    Oracle: per-stream MISS = microbatches × (compute read lines + send ICI
+    lines, last stage sends nothing); ICI_HOPS = send lines × hops × count.
+    """
+    from .topology import pipeline_send
+
+    topo = _topo_for(shape)
+    n = topo.n_devices
+    sends = pipeline_send(topo, act_kb << 10, microbatches=microbatches, name="act")
+    by_stage_m = {(k.device, i % microbatches): k
+                  for i, k in enumerate(sends)}
+    launches: List[Launch] = []
+    expected: Dict[str, Dict[str, int]] = {}
+    for m in range(microbatches):
+        for d in range(n):
+            sname = f"stage_{d}"
+            ck, cn = _synth(f"fwd_{d}_m{m}", rd=work_kb << 10,
+                            base=(128 + d * microbatches + m) << 22, device=d)
+            wait = (f"act_{d - 1}_m{m}",) if d > 0 else ()
+            launches.append(Launch(sname, ck, wait=wait))
+            if d < n - 1:
+                launches.append(Launch(sname, by_stage_m[(d, m)],
+                                       record=(f"act_{d}_m{m}",)))
+    send_lines = _lines(act_kb << 10)
+    for d in range(n):
+        sname = f"stage_{d}"
+        cn = _lines(work_kb << 10) * microbatches
+        if d < n - 1:
+            hops = len(topo.route(d, d + 1)) - 1
+            expected[sname] = _dist_expected(
+                sname, cn + send_lines * microbatches,
+                send_lines * hops * microbatches)
+        else:
+            expected[sname] = _dist_expected(sname, cn, 0)
+    return launches, expected, {"topology_shape": tuple(shape)}
+
+
+@scenario("dist_ep_alltoall", space={"shape": ((2, 2), (4,), (2, 3)),
+                                     "expert_kb": (16, 64)})
+def dist_ep_alltoall(shape=(2, 2), expert_kb=32, local_kb=32):
+    """Expert-parallel shuffle: every device runs its expert compute, then
+    all-to-alls tokens — one routed transfer per (src, dst) pair, so mesh
+    shapes exercise multi-hop dimension-ordered routing and per-link
+    contention where routes overlap.
+
+    Oracle: per-stream MISS = local lines + (N-1) × per-pair ICI lines;
+    ICI_HOPS = per-pair lines × Σ_dst hops(src → dst).
+    """
+    from .topology import all_to_all
+
+    topo = _topo_for(shape)
+    pair = all_to_all(topo, expert_kb << 10, name="shuffle")
+    launches: List[Launch] = []
+    expected: Dict[str, Dict[str, int]] = {}
+    pair_lines = _lines(expert_kb << 10)
+    for d in range(topo.n_devices):
+        sname = f"ep_{d}"
+        lk, ln = _synth(f"expert_{d}", rd=local_kb << 10, base=(192 + d) << 24,
+                        device=d)
+        launches.append(Launch(sname, lk))
+        hop_sum = 0
+        for kd in pair:
+            if kd.device == d:
+                launches.append(Launch(sname, kd))
+                hop_sum += len(topo.hops_for(kd))
+        expected[sname] = _dist_expected(
+            sname, ln + (topo.n_devices - 1) * pair_lines, pair_lines * hop_sum)
+    return launches, expected, {"topology_shape": tuple(shape)}
+
+
+@scenario("dist_straggler", space={"shape": ((2, 2), (4,)),
+                                   "slow_factor": (2.0, 4.0)})
+def dist_straggler(shape=(2, 2), grad_kb=128, local_kb=64, slow_device=0,
+                   slow_factor=4.0):
+    """The DP all-reduce with one straggler device: its stream issues at
+    ``1/slow_factor`` rate, so every peer's ring transfer finishes while the
+    straggler's lags — visible per-device in the timeline and link ledgers.
+
+    Oracle: a slowdown reschedules, never reclassifies — the per-stream
+    counts are exactly :func:`dist_dp_allreduce`'s.
+    """
+    launches, expected, cfg = dist_dp_allreduce(
+        shape=shape, grad_kb=grad_kb, local_kb=local_kb)
+    # Stream ids bind in first-appearance order (default stream is 0), and
+    # the builder launches device-major, so dp_{d} is stream d+1.
+    cfg["stream_slowdown"] = {int(slow_device) + 1: float(slow_factor)}
+    return launches, expected, cfg
+
+
 # Synthesized-beat scenarios never exercise the line cache: every mechanism
 # is provably inert (fast-forward windows stay exact — docs/DESIGN.md §5.10).
 # The fault scenarios are synthesized too, so their oracles — fault lanes
-# included — hold verbatim under every mechanism.
+# included — hold verbatim under every mechanism, and the distributed family
+# (synthesized compute + routed ICI, which bypasses VMEM entirely) joins the
+# same class.
 for _name in ("priority_preemption", "copy_compute_overlap", "fork_join",
               "poisson_burst", "mps_like", "straggler",
-              "fault_kernel_abort", "fault_straggler"):
+              "fault_kernel_abort", "fault_straggler",
+              "dist_dp_allreduce", "dist_pp_pipeline", "dist_ep_alltoall",
+              "dist_straggler"):
     register_mech_oracle(_name, mech_invariant_oracle)
 register_mech_oracle("cache_thrash", _cache_thrash_mech_oracle)
 register_mech_oracle("producer_consumer", _producer_consumer_mech_oracle)

@@ -46,13 +46,17 @@ API_SURFACE = {
     ],
     "repro.sim": [
         "Access", "Bandwidth", "BatchJob", "BatchResult", "BatchRunner",
-        "Compute", "HW_V5E", "KernelDesc", "LINE_SIZE", "Launch",
+        "Compute", "DeviceTopology", "HW_V5E", "KernelDesc", "LINE_SIZE",
+        "Launch",
         "ORACLE_KEYS", "ScenarioInstance", "ScenarioSpec", "SimConfig",
-        "SimResult", "TPUSimulator", "VMEMCache", "build",
-        "deepbench_like_workload", "divergent_draws", "get_spec",
+        "SimResult", "TPUSimulator", "VMEMCache",
+        "all_reduce_ring", "all_reduce_tree", "all_to_all", "build",
+        "deepbench_like_workload", "divergent_draws",
+        "expected_link_bytes", "get_spec",
         "kernels_from_compiled",
         "kernels_from_summary", "l2_lat_expected_counts",
         "l2_lat_multistream", "list_scenarios", "mixed_stream_workload",
+        "pipeline_send",
         "pointer_chase_trace", "run_job", "same_shape_jobs", "scenario",
         "space_draws", "streaming_trace", "sweep_jobs", "value_only_draws",
     ],

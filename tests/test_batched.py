@@ -140,16 +140,25 @@ class TestFaultPlanGating:
 
     @pytest.mark.parametrize("backend", ["vector", "batched"])
     def test_armed_plan_rejected_naming_pool(self, backend):
-        jobs = [BatchJob.make("l2_lat", dict(n_loads=64, n_streams=2))]
-        plan = FaultPlan(seed=1, crash_jobs=(0,))
-        with pytest.raises(ValueError, match="pool"):
+        # The rejection must name the offending job's scenario and the
+        # backend, not just restate the flag (docs/DESIGN.md §5.11).
+        jobs = [BatchJob.make("mps_like"),
+                BatchJob.make("l2_lat", dict(n_loads=64, n_streams=2))]
+        plan = FaultPlan(seed=1, crash_jobs=(1,))
+        with pytest.raises(ValueError) as exc:
             BatchRunner(jobs, backend=backend, fault_plan=plan)
+        msg = str(exc.value)
+        assert "backend='pool'" in msg
+        assert "job 1 ('l2_lat')" in msg and f"backend={backend!r}" in msg
 
     @pytest.mark.parametrize("backend", ["vector", "batched"])
     def test_journal_rejected(self, backend, tmp_path):
         jobs = [BatchJob.make("l2_lat", dict(n_loads=64, n_streams=2))]
-        with pytest.raises(ValueError, match="pool"):
+        with pytest.raises(ValueError) as exc:
             BatchRunner(jobs, backend=backend, journal=str(tmp_path / "j.jsonl"))
+        msg = str(exc.value)
+        assert "backend='pool'" in msg
+        assert "'l2_lat'" in msg and f"backend={backend!r}" in msg
 
 
 # --------------------------------------------------------------------------- array ops

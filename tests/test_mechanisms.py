@@ -60,6 +60,10 @@ GOLDEN_CYCLES_NONE = {
     "cache_thrash": 9602,
     "copy_compute_overlap": 798,
     "deepbench": 5133,
+    "dist_dp_allreduce": 131,
+    "dist_ep_alltoall": 67,
+    "dist_pp_pipeline": 322,
+    "dist_straggler": 512,
     "fault_kernel_abort": 18,
     "fault_straggler": 262,
     "fork_join": 163,

@@ -19,7 +19,7 @@ import os
 
 import pytest
 
-from repro.core.stats import AccessOutcome
+from repro.core.stats import AccessOutcome, AccessType
 from repro.core.stream import StreamManager
 from repro.sim.scenarios import build, get_spec, list_scenarios
 
@@ -36,6 +36,10 @@ GOLDEN_CYCLES = {
     "cache_thrash": 9602,
     "copy_compute_overlap": 798,
     "deepbench": 5133,
+    "dist_dp_allreduce": 131,
+    "dist_ep_alltoall": 67,
+    "dist_pp_pipeline": 322,
+    "dist_straggler": 512,
     "fault_kernel_abort": 18,
     "fault_straggler": 262,
     "fork_join": 163,
@@ -79,12 +83,19 @@ GOLDEN_SPLITS = {
 
 
 def stream_split(res, sid):
-    m = res.stats.stream_matrix(sid)
+    m = res.stats.stream_matrix(sid).copy()
+    # The ICI_HOP row is per-link *traffic* (landed in the MISS column, one
+    # event per hop — docs/DESIGN.md §5.14), not demand: report it on its
+    # own lane and keep it out of the demand sums, mirroring outcome_counts.
+    hops = int(m[AccessType.ICI_HOP].sum())
+    m[AccessType.ICI_HOP] = 0
     out = {
         "HIT": int(m[:, AccessOutcome.HIT].sum()),
         "MSHR_HIT": int(m[:, AccessOutcome.HIT_RESERVED].sum()),
         "MISS": int(m[:, AccessOutcome.MISS].sum()),
         "RES_FAIL": int(m[:, AccessOutcome.RESERVATION_FAILURE].sum()),
+        # topology link-traffic lane (zero on single-chip topologies)
+        "ICI_HOPS": hops,
         # fault-injection lanes (docs/DESIGN.md §5.11; zero without a plan)
         "KERNEL_ABORT": int(m[:, AccessOutcome.KERNEL_ABORT].sum()),
         "RETRY": int(m[:, AccessOutcome.RETRY].sum()),

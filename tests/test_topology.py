@@ -1,0 +1,331 @@
+"""Multi-chip topology subsystem suite (docs/DESIGN.md §5.14).
+
+* **structure/routing** — mesh/ring construction over the shared
+  ``launch.mesh_shapes`` vocabulary, dimension-ordered deterministic
+  routing, wrap semantics (no duplicate link at axis size 2).
+* **conservation** — bytes injected at a route head land on every link of
+  the route exactly once, on all three engines (`expected_link_bytes` /
+  `DeviceTopology.check_conservation`), plus the registered ``dist_*``
+  scenarios' per-stream oracles.
+* **device axis** — ``filter(device=)`` / ``groupby("device")`` semantics,
+  unattributed streams landing on device 0, unknown devices rejected.
+* **invisibility when off** — a single-device topology is bit-identical to
+  the legacy single-chip goldens (cycles, signature, report text).
+* **hypothesis** — topology-shape draws: tri-engine signature identity and
+  trace-cache invalidation (shape change ⇒ recompile; rerun ⇒ replay).
+"""
+
+import io
+import re
+import subprocess
+import sys
+
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.query import QueryError
+from repro.core.sinks import TextSink
+from repro.sim import (
+    DeviceTopology,
+    SimConfig,
+    all_reduce_ring,
+    all_reduce_tree,
+    all_to_all,
+    expected_link_bytes,
+    pipeline_send,
+)
+from repro.sim.compiled import TRACE_CACHE
+from repro.sim.scenarios import build
+
+ENGINES = ("cycle", "event", "compiled")
+DIST_SCENARIOS = ("dist_dp_allreduce", "dist_pp_pipeline",
+                  "dist_ep_alltoall", "dist_straggler")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_trace_cache():
+    TRACE_CACHE.clear()
+    yield
+    TRACE_CACHE.clear()
+
+
+def _topo(shape, **kw):
+    kw.setdefault("link_bytes_per_cycle", 64.0)
+    return DeviceTopology(shape, **kw)
+
+
+# ------------------------------------------------------------------ structure
+class TestStructure:
+    def test_axes_reuse_launch_vocabulary(self):
+        assert _topo((4,)).axes == ("data",)
+        assert _topo((2, 2)).axes == ("data", "model")
+        assert _topo((2, 2, 2)).axes == ("pod", "data", "model")
+
+    def test_coords_roundtrip(self):
+        topo = _topo((2, 3))
+        for d in range(topo.n_devices):
+            assert topo.device_at(topo.coords(d)) == d
+        assert topo.coords(5) == (1, 2)  # row-major
+
+    def test_invalid_shapes_rejected(self):
+        with pytest.raises(ValueError):
+            _topo((2, 2, 2, 2))  # rank 4 outside the vocabulary
+        with pytest.raises(ValueError):
+            _topo((0,))
+
+    def test_no_wrap_duplicate_at_size_two(self):
+        # at axis size 2 the wrap link would duplicate the adjacent pair
+        topo = _topo((2, 2))
+        assert set(topo.links) == {(0, 1), (1, 0), (0, 2), (2, 0),
+                                   (1, 3), (3, 1), (2, 3), (3, 2)}
+
+    def test_ring_wrap_links(self):
+        topo = _topo((4,))
+        assert (3, 0) in topo.links and (0, 3) in topo.links
+        assert (0, 3) not in _topo((4,), wrap=False).links
+
+
+# -------------------------------------------------------------------- routing
+class TestRouting:
+    def test_ring_takes_shorter_direction(self):
+        topo = _topo((4,))
+        assert topo.route(0, 3) == (0, 3)       # wrap: 1 hop back beats 3 fwd
+        assert topo.route(1, 3) == (1, 2, 3)    # tie (2 vs 2) breaks toward +1
+        assert _topo((4,), wrap=False).route(0, 3) == (0, 1, 2, 3)
+
+    def test_mesh_dimension_ordered(self):
+        topo = _topo((2, 2))
+        assert topo.route(0, 3) == (0, 2, 3)    # outermost axis first
+        assert topo.route(3, 0) == (3, 1, 0)
+        assert topo.route(1, 1) == (1,)
+
+    def test_route_is_deterministic(self):
+        topo = _topo((2, 3))
+        for s in range(topo.n_devices):
+            for d in range(topo.n_devices):
+                assert topo.route(s, d) == topo.route(s, d)
+
+    def test_expand_route_endpoints_only(self):
+        topo = _topo((2, 2))
+        assert topo.expand_route((0, 3)) == ((0, 2), (2, 3))
+        assert topo.expand_route((0, 3, 0)) == ((0, 2), (2, 3), (3, 1), (1, 0))
+
+    def test_hops_for_defaults_to_ring_successor(self):
+        topo = _topo((4,))
+        from repro.sim import KernelDesc
+
+        kd = KernelDesc(name="k", ici_bytes=512, device=2)
+        assert topo.hops_for(kd) == ((2, 3),)
+        assert _topo((1,)).hops_for(KernelDesc(name="k", ici_bytes=512)) == ()
+
+
+# --------------------------------------------------------------- conservation
+class TestConservation:
+    @pytest.mark.parametrize("engine", ENGINES)
+    @pytest.mark.parametrize("collective", [
+        lambda t: all_reduce_ring(t, 64 << 10),
+        lambda t: all_reduce_tree(t, 32 << 10),
+        lambda t: all_to_all(t, 8 << 10),
+        lambda t: pipeline_send(t, 16 << 10, microbatches=2),
+    ], ids=["ar_ring", "ar_tree", "a2a", "pp_send"])
+    def test_link_bytes_conserved_per_engine(self, engine, collective):
+        """Bytes injected at each route head land on every hop of the route
+        exactly once — checked against the sim's actual link ledgers on all
+        three engines (the compiled engine restores them from the trace)."""
+        cfg = SimConfig(engine=engine, topology_shape=(2, 2))
+        from repro.sim import TPUSimulator
+
+        sim = TPUSimulator(cfg)
+        descs = collective(sim.topology)
+        for d in descs:
+            sid = sim.create_stream(f"s{d.device}").stream_id
+            sim.launch(sid, d)
+        sim.run()
+        check = sim.topology.check_conservation(descs)
+        assert check["ok"], check["mismatches"]
+        # every expected link is a real link of the mesh
+        want = expected_link_bytes(sim.topology, descs)
+        assert set(want) <= set(sim.topology.links)
+
+    @pytest.mark.parametrize("name", DIST_SCENARIOS)
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_dist_scenario_oracles(self, name, engine):
+        inst = build(name)
+        res = inst.run(engine=engine)
+        check = inst.check_oracle(res)
+        assert check is not None and check["ok"], check
+
+    @pytest.mark.parametrize("name", DIST_SCENARIOS)
+    def test_dist_tri_engine_identity(self, name):
+        inst = build(name)
+        sigs = [inst.run(engine=e).signature() for e in ENGINES]
+        assert sigs[0] == sigs[1] == sigs[2]
+
+
+# ---------------------------------------------------------------- device axis
+class TestDeviceAxis:
+    def test_groupby_device_partitions_total(self):
+        inst = build("dist_dp_allreduce", shape=(2, 2))
+        res = inst.run(engine="event")
+        frame = inst.frame(res)
+        groups = frame.groupby("device").frames()
+        assert sorted(groups) == [0, 1, 2, 3]
+        assert sum(g.sum() for g in groups.values()) == frame.sum()
+
+    def test_filter_device_matches_groupby(self):
+        inst = build("dist_dp_allreduce", shape=(2, 2))
+        frame = inst.frame(inst.run(engine="event"))
+        for d, g in frame.groupby("device").frames().items():
+            assert frame.filter(device=d).sum() == g.sum()
+
+    def test_unattributed_streams_land_on_device_zero(self):
+        # a legacy single-chip run has no device map: every stream —
+        # including the default stream — groups under device 0
+        inst = build("mixed_stream", n_streams=2)
+        frame = inst.frame(inst.run(engine="event"))
+        groups = frame.groupby("device").frames()
+        assert list(groups) == [0]
+        assert groups[0].sum() == frame.sum()
+        assert frame.device_label(1) == 0
+
+    def test_unknown_device_rejected(self):
+        inst = build("dist_dp_allreduce", shape=(2, 2))
+        frame = inst.frame(inst.run(engine="event"))
+        with pytest.raises(QueryError, match="unknown device"):
+            frame.filter(device=7)
+
+    def test_result_devices_map(self):
+        inst = build("dist_dp_allreduce", shape=(2, 2))
+        res = inst.run(engine="event")
+        # dp_{d} streams bind in first-appearance order: stream d+1 on device d
+        assert res.devices == {1: 0, 2: 1, 3: 2, 4: 3}
+
+    def test_launch_outside_topology_rejected(self):
+        from repro.sim import KernelDesc, TPUSimulator
+
+        sim = TPUSimulator(SimConfig(topology_shape=(2,)))
+        sid = sim.create_stream("s").stream_id
+        with pytest.raises(ValueError, match="device"):
+            sim.launch(sid, KernelDesc(name="k", flops=1.0, device=5))
+            sim.run()
+
+    def test_ici_hops_excluded_from_demand(self):
+        inst = build("dist_dp_allreduce", shape=(2, 2))
+        frame = inst.frame(inst.run(engine="event"))
+        counts = frame.filter(stream="dp_0").outcome_counts()
+        assert counts["ICI_HOPS"] > 0
+        # hop events ride their own traffic row — demand TOTAL excludes them
+        demand = (counts["HIT"] + counts["MSHR_HIT"] + counts["MISS"]
+                  + counts["VICTIM_HIT"] + counts["MISS_CACHE_HIT"]
+                  + counts["PREFETCH_HIT"])
+        assert counts["TOTAL"] == demand
+
+
+# ----------------------------------------------------- single-device identity
+#: pre-topology golden cycles (tests/test_scenarios.GOLDEN_CYCLES excerpt) —
+#: a (1,)-topology run must reproduce these bit-for-bit on every engine.
+SINGLE_DEVICE_GOLDENS = {"cache_thrash": 9602, "l2_lat": 608, "mixed_stream": 240}
+
+
+class TestSingleDeviceIdentity:
+    @pytest.mark.parametrize("scenario", sorted(SINGLE_DEVICE_GOLDENS))
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_bit_identical_to_goldens(self, scenario, engine):
+        inst = build(scenario)
+        bare = inst.run(engine=engine)
+        topo = inst.run(engine=engine, config=SimConfig(topology_shape=(1,)))
+        assert bare.cycles == SINGLE_DEVICE_GOLDENS[scenario]
+        assert topo.cycles == bare.cycles
+        assert topo.signature() == bare.signature()
+
+    @pytest.mark.parametrize("scenario", sorted(SINGLE_DEVICE_GOLDENS))
+    def test_report_text_identical(self, scenario):
+        def text(config=None):
+            buf = io.StringIO()
+            inst = build(scenario)
+            inst.make_sim(engine="event", config=config,
+                          sinks=[TextSink(buf)]).run()
+            # kernel uids come from a process-global counter: normalize so
+            # only genuine report differences (counts, cycles, lanes) fail
+            return re.sub(r"uid[ =]+\d+", "uid N", buf.getvalue())
+
+        assert text(SimConfig(topology_shape=(1,))) == text()
+
+    def test_single_device_topology_has_no_links(self):
+        topo = _topo((1,))
+        assert topo.n_devices == 1 and not topo.links
+
+
+# ----------------------------------------------------------------- hypothesis
+SHAPES = [(1,), (2,), (3,), (4,), (2, 2), (2, 3), (2, 2, 2)]
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(shape=st.sampled_from(SHAPES),
+           grad_kb=st.sampled_from([32, 64, 128]))
+    def test_hypothesis_shapes_tri_engine_identity(shape, grad_kb):
+        """Any vocabulary shape × payload: cycle == event == compiled, and
+        the dist oracle holds."""
+        TRACE_CACHE.clear()
+        inst = build("dist_dp_allreduce", shape=shape, grad_kb=grad_kb)
+        res = {e: inst.run(engine=e) for e in ENGINES}
+        assert res["cycle"].signature() == res["event"].signature()
+        assert res["event"].signature() == res["compiled"].signature()
+        check = inst.check_oracle(res["event"])
+        assert check is not None and check["ok"], check
+
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(data=st.data())
+    def test_hypothesis_shape_change_invalidates_trace(data):
+        """Topology fields are structural: a shape change must recompile,
+        a rerun at the same shape must replay from cache."""
+        a = data.draw(st.sampled_from(SHAPES))
+        b = data.draw(st.sampled_from([s for s in SHAPES if s != a]))
+        TRACE_CACHE.clear()
+        inst_a = build("dist_dp_allreduce", shape=a)
+        inst_a.run(engine="compiled")
+        assert (TRACE_CACHE.compiles, TRACE_CACHE.hits) == (1, 0)
+        inst_a.run(engine="compiled")
+        assert (TRACE_CACHE.compiles, TRACE_CACHE.hits) == (1, 1)
+        build("dist_dp_allreduce", shape=b).run(engine="compiled")
+        assert TRACE_CACHE.compiles == 2
+
+
+class TestTraceCacheStructural:
+    def test_wrap_and_link_rate_are_structural(self):
+        inst = build("dist_dp_allreduce", shape=(4,))
+        inst.run(engine="compiled")
+        assert TRACE_CACHE.compiles == 1
+        inst.run(engine="compiled", config=SimConfig(topology_wrap=False))
+        assert TRACE_CACHE.compiles == 2
+        inst.run(engine="compiled", config=SimConfig(link_bytes_per_cycle=8.0))
+        assert TRACE_CACHE.compiles == 3
+
+    def test_compiled_replay_restores_link_ledgers(self):
+        inst = build("dist_dp_allreduce", shape=(2, 2))
+        sim1 = inst.make_sim(engine="compiled")
+        sim1.run()
+        want = sim1.topology.link_bytes()
+        assert any(want.values())
+        sim2 = inst.make_sim(engine="compiled")  # cache hit → replay
+        sim2.run()
+        assert TRACE_CACHE.hits >= 1
+        assert sim2.topology.link_bytes() == want
+
+
+# ------------------------------------------------------------------- jax-free
+def test_topology_import_is_jax_free():
+    """The simulator's topology stack (including the shared
+    ``launch.mesh_shapes`` vocabulary) must import without jax."""
+    code = ("import repro, repro.sim.topology, repro.launch.mesh_shapes, sys; "
+            "assert 'jax' not in sys.modules, 'topology import loaded jax'")
+    subprocess.run([sys.executable, "-c", code], check=True)
